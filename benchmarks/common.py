@@ -1,0 +1,109 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import csv
+import io
+import os
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional
+
+from repro.configs import get_arch, reduced
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.core.backends import BACKENDS
+from repro.core.graph_builder import build_hdgraph
+from repro.core.objectives import Problem
+from repro.core.perfmodel import ModelOptions
+from repro.core.platform import AbstractPlatform, Platform, V5E_POD
+
+RESULT_DIR = os.environ.get("BENCH_OUT", "experiments/benchmarks")
+
+# The paper's model zoo spans 4K .. 133M params (Table III); our assigned-
+# architecture analogue ladder, small to large:
+ZOO = {
+    "3-layer":     ("granite-moe-1b-a400m", dict(num_layers=2, d_model=64,
+                                                 num_heads=4, num_kv_heads=2,
+                                                 d_ff=64, vocab_size=64,
+                                                 num_experts=2,
+                                                 experts_per_token=1)),
+    "TFC":         ("tinyllama-1.1b", dict(num_layers=2, d_model=64,
+                                           num_heads=4, num_kv_heads=2,
+                                           d_ff=128, vocab_size=128)),
+    "LeNet":       ("tinyllama-1.1b", dict(num_layers=4, d_model=128,
+                                           num_heads=4, num_kv_heads=2,
+                                           d_ff=256, vocab_size=512)),
+    "CNV":         ("tinyllama-1.1b", dict()),          # reduced default
+    "MobileNetV1": ("jamba-1.5-large-398b", dict()),    # wide + deep + MoE
+}
+
+SMALL_SHAPE = ShapeSpec("bench_train", 256, 16, "train")
+
+
+def zoo_arch(name: str) -> ArchConfig:
+    base, overrides = ZOO[name]
+    return reduced(get_arch(base), **overrides)
+
+
+def make_problem(arch: ArchConfig, *, shape: ShapeSpec = SMALL_SHAPE,
+                 backend: str = "spmd", objective: str = "latency",
+                 exec_model: str = "streaming",
+                 platform: Optional[Platform] = None,
+                 batch_amortisation: int = 256,
+                 **opts) -> Problem:
+    platform = platform or Platform(
+        name="bench-4x4", mesh_axes=(("data", 4), ("model", 4)))
+    graph = build_hdgraph(arch, shape)
+    return Problem(graph=graph, platform=platform,
+                   backend=BACKENDS[backend], objective=objective,
+                   exec_model=exec_model,
+                   batch_amortisation=batch_amortisation,
+                   opts=ModelOptions(**opts))
+
+
+class Reporter:
+    """Collects (benchmark, row dict) results; emits CSV + markdown."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.rows: List[Dict[str, Any]] = []
+
+    def add(self, **row):
+        self.rows.append(row)
+
+    def print_table(self, title: str = ""):
+        if not self.rows:
+            return
+        cols = list(self.rows[0])
+        widths = {c: max(len(str(c)), *(len(str(r.get(c, ""))) for r in
+                                        self.rows)) for c in cols}
+        print(f"\n### {title or self.name}")
+        print(" | ".join(str(c).ljust(widths[c]) for c in cols))
+        print("-|-".join("-" * widths[c] for c in cols))
+        for r in self.rows:
+            print(" | ".join(str(r.get(c, "")).ljust(widths[c])
+                             for c in cols))
+
+    def save(self):
+        os.makedirs(RESULT_DIR, exist_ok=True)
+        path = os.path.join(RESULT_DIR, f"{self.name}.csv")
+        if not self.rows:
+            return path
+        with open(path, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=list(self.rows[0]))
+            w.writeheader()
+            w.writerows(self.rows)
+        return path
+
+
+def fmt_time(seconds: float) -> str:
+    if seconds < 120:
+        return f"{seconds:.0f} s"
+    if seconds < 7200:
+        return f"{seconds/60:.0f} min"
+    if seconds < 86400 * 3:
+        return f"{seconds/3600:.1f} h"
+    if seconds < 86400 * 365:
+        return f"{seconds/86400:.0f} days"
+    if seconds < 86400 * 365 * 1000:
+        return f"{seconds/86400/365:.1f} years"
+    return f"{seconds/86400/365/100:.1e} centuries"

@@ -1,0 +1,102 @@
+"""§Perf hillclimb: hypothesis -> change -> measure -> verdict ladders for
+the three chosen cells, driven by the SAMO analytic roofline (the same model
+the dry-run cross-validates against compiled HLO).
+
+Cells (per the brief):
+  tinyllama-1.1b x train_4k   most representative of the paper's technique
+  qwen2-vl-72b   x train_4k   worst baseline roofline fraction
+  kimi-k2-1t-a32b x train_4k  most collective/reconfiguration-bound
+
+Ladder (each step is one hypothesis; all cumulative):
+  base      paper-faithful SAMO (no ZeRO, no SP, fp32 grads, no overlap)
+  zero1     shard fp32 optimiser state over DP (residency /k -> fewer
+            weight-streaming partitions -> less reconfiguration)
+  sp        Megatron sequence-parallel stash (residency /s_out in TP
+            regions -> more merging for the 72B/1T cells)
+  comp      int8 gradient all-reduce (DP collective bytes x0.25)
+  overlap   hide 60% of collectives under compute (async dispatch /
+            double-buffered all-reduce)
+
+Output: markdown rows for EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from repro.configs import SHAPES_BY_NAME, get_arch
+from repro.core.backends import BACKENDS
+from repro.core.graph_builder import build_hdgraph
+from repro.core.objectives import Problem
+from repro.core.optimizers import rule_based
+from repro.core.perfmodel import ModelOptions
+from repro.core.platform import V5E_POD
+
+CELLS = ["tinyllama-1.1b", "qwen2-vl-72b", "kimi-k2-1t-a32b"]
+
+LADDER = [
+    ("base (paper-faithful)", dict()),
+    ("+zero1", dict(zero1=True)),
+    ("+seq-parallel stash", dict(zero1=True, seq_parallel_stash=True)),
+    ("+int8 grad allreduce", dict(zero1=True, seq_parallel_stash=True,
+                                  grad_compression=0.25)),
+    ("+60% collective overlap", dict(zero1=True, seq_parallel_stash=True,
+                                     grad_compression=0.25,
+                                     overlap_collectives=0.6)),
+]
+
+
+def evaluate(arch_name: str, opts: ModelOptions, budget: float = 45.0):
+    arch = get_arch(arch_name)
+    shape = SHAPES_BY_NAME["train_4k"]
+    graph = build_hdgraph(arch, shape)
+    prob = Problem(graph=graph, platform=V5E_POD, backend=BACKENDS["spmd"],
+                   objective="latency", exec_model="spmd", opts=opts)
+    res = rule_based(prob, time_budget_s=budget)
+    ev = res.evaluation
+    evals = ev.node_evals
+    terms = {
+        "compute_s": sum(e.compute_s for e in evals),
+        "memory_s": sum(e.memory_s for e in evals),
+        "collective_s": sum(e.collective_s for e in evals),
+    }
+    # roofline fraction: ideal MODEL_FLOPS time / achieved latency
+    tokens = shape.global_batch * shape.seq_len
+    ideal = 6.0 * arch.active_param_count() * tokens \
+        / (V5E_POD.chips * V5E_POD.peak_flops)
+    return {
+        "feasible": ev.feasible,
+        "latency_s": ev.latency,
+        "reconf_s": ev.reconf_time,
+        "partitions": res.variables.num_partitions,
+        "roofline_frac": ideal / ev.latency if ev.latency > 0 else 0.0,
+        **terms,
+    }
+
+
+def run(budget: float = 45.0):
+    print("\n## §Perf hillclimb (train_4k, single pod, latency objective)\n")
+    for cell in CELLS:
+        print(f"### {cell}")
+        print("| step | latency s | reconf s | parts | compute s | "
+              "collective s | roofline frac | verdict |")
+        print("|---|---|---|---|---|---|---|---|")
+        prev = None
+        for name, o in LADDER:
+            t0 = time.time()
+            r = evaluate(cell, ModelOptions(**o), budget)
+            verdict = ""
+            if prev is not None:
+                d = (prev["latency_s"] - r["latency_s"]) / prev["latency_s"]
+                verdict = (f"{'CONFIRMED' if d > 0.005 else 'refuted/neutral'}"
+                           f" ({d*100:+.1f}%)")
+            print(f"| {name} | {r['latency_s']:.3f} | {r['reconf_s']:.3f} | "
+                  f"{r['partitions']} | {r['compute_s']:.3f} | "
+                  f"{r['collective_s']:.3f} | {r['roofline_frac']:.2f} | "
+                  f"{verdict} |", flush=True)
+            prev = r
+        print()
+
+
+if __name__ == "__main__":
+    run(float(sys.argv[1]) if len(sys.argv) > 1 else 45.0)

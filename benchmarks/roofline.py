@@ -1,0 +1,72 @@
+"""Roofline report: reads the dry-run JSONs (experiments/dryrun/*.json) and
+prints the three-term table per (arch x shape) — §Roofline deliverable.
+
+Terms per the brief (single-pod, per-device SPMD module):
+  compute    HLO_FLOPs / peak          (exact: unrolled-probe extrapolation)
+  memory     HLO_bytes / HBM_bw        (XLA 'bytes accessed': pre-fusion
+             upper bound — reported, but bottleneck classification also
+             shows the SAMO analytic term for honesty)
+  collective collective operand bytes / link_bw  (parsed from HLO)
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import Reporter
+
+DRYRUN_DIR = os.environ.get("DRYRUN_OUT", "experiments/dryrun")
+
+
+def load_records(tag="1pod"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{tag}.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run(reporter=None) -> Reporter:
+    rep = reporter or Reporter("roofline")
+    recs = load_records("1pod")
+    if not recs:
+        print("[roofline] no dry-run records found — run "
+              "`python -m repro.launch.dryrun --all` first")
+        return rep
+    for r in recs:
+        if r.get("skipped"):
+            rep.add(arch=r["arch"], shape=r["shape"], note="skipped: " +
+                    r["reason"], compute_s="-", memory_s="-",
+                    collective_s="-", bottleneck="-", useful="-")
+            continue
+        errs = [c for c in r.get("cells", []) if "error" in c]
+        if errs or "roofline" not in r:
+            rep.add(arch=r["arch"], shape=r["shape"],
+                    note=f"{len(errs)} partition(s) FAILED",
+                    compute_s="-", memory_s="-", collective_s="-",
+                    bottleneck="-", useful="-")
+            continue
+        rl = r["roofline"]
+        mt = r["samo"]["model_terms"]
+        # classification: compute/collective from HLO; memory from the
+        # analytic model (XLA bytes-accessed is pre-fusion, see module doc)
+        terms = {"compute": rl["compute_s"], "memory": mt["memory_s"],
+                 "collective": rl["collective_s"]}
+        rep.add(arch=r["arch"], shape=r["shape"],
+                parts=r["partitions"],
+                compute_s=f"{rl['compute_s']:.3f}",
+                memory_s=f"{rl['memory_s']:.3f}",
+                collective_s=f"{rl['collective_s']:.3f}",
+                model_mem_s=f"{mt['memory_s']:.3f}",
+                bottleneck=max(terms, key=terms.get),
+                useful=f"{rl['useful_fraction']:.2f}",
+                peak_gib=f"{max(c.get('peak_memory_gib', 0) for c in r['cells']):.1f}",
+                note="")
+    rep.print_table("Roofline — per (arch x shape), single pod, per chip")
+    rep.save()
+    return rep
+
+
+if __name__ == "__main__":
+    run()

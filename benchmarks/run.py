@@ -1,0 +1,40 @@
+"""Benchmark harness: one module per paper table/figure + the roofline
+report. ``python -m benchmarks.run [names...]``"""
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import (
+    fig2_optimizer_compare,
+    fig4_batch_partitions,
+    roofline,
+    table4_design_space,
+    table5_objectives,
+    table6_vs_baseline,
+)
+
+ALL = {
+    "table4": table4_design_space.run,
+    "fig2": fig2_optimizer_compare.run,
+    "table5": table5_objectives.run,
+    "table6": table6_vs_baseline.run,
+    "fig4": fig4_batch_partitions.run,
+    "roofline": roofline.run,
+}
+
+
+def main(argv=None) -> int:
+    names = (argv or sys.argv[1:]) or list(ALL)
+    for name in names:
+        if name not in ALL:
+            print(f"unknown benchmark {name!r}; known: {sorted(ALL)}")
+            return 1
+        t0 = time.time()
+        ALL[name]()
+        print(f"[{name}] done in {time.time()-t0:.1f}s", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

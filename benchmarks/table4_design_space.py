@@ -1,0 +1,55 @@
+"""Paper Table IV: design-space size, evaluation rate, and estimated
+brute-force exploration time per (network x backend).
+
+Reproduces the paper's three claims:
+  * spaces are astronomically large (10^9 .. 10^42 there; similar orders
+    here on the FPGA-style AbstractPlatform fold menus),
+  * the spmd backend (fpgaConvNet analogue, 3 free vars/node) has the
+    largest space, simple (HLS4ML) the smallest,
+  * full enumeration is intractable for everything beyond the smallest
+    network — which motivates SA and Rule-Based.
+"""
+from __future__ import annotations
+
+import random
+import time
+
+from repro.core.backends import BACKENDS
+from repro.core.optimizers.common import repair
+from repro.core.platform import AbstractPlatform
+
+from benchmarks.common import Reporter, fmt_time, make_problem, zoo_arch
+
+NETWORKS = ("3-layer", "TFC", "LeNet", "CNV")
+POINTS = 300
+
+
+def run(reporter=None) -> Reporter:
+    rep = reporter or Reporter("table4_design_space")
+    plat = AbstractPlatform(name="abstract-16",
+                            mesh_axes=(("data", 4), ("model", 4)))
+    for net in NETWORKS:
+        arch = zoo_arch(net)
+        for bname, backend in BACKENDS.items():
+            prob = make_problem(arch, backend=bname, platform=plat)
+            size = backend.design_space_size(prob.graph, plat)
+            # measured evaluation rate: random legal designs
+            rng = random.Random(0)
+            v = repair(prob, backend.initial(prob.graph))
+            t0 = time.perf_counter()
+            n = 0
+            while time.perf_counter() - t0 < 0.5 and n < POINTS:
+                v2 = backend.random_move(rng, prob.graph, v, plat)
+                prob.evaluate(v2)
+                n += 1
+            rate = n / (time.perf_counter() - t0)
+            rep.add(network=net, backend=bname, size=f"{size:.2e}",
+                    points_per_s=f"{rate:.0f}",
+                    est_full_search=fmt_time(size / max(rate, 1e-9)))
+    rep.print_table("Table IV — design-space size & brute-force time")
+    rep.save()
+    return rep
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Serve a small model with batched requests: prefill a batch of prompts,
+then decode greedily against the sharded KV cache.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+import dataclasses
+
+from repro.configs import get_arch
+from repro.launch.serve import serve
+
+ARCH_SMALL = dataclasses.replace(
+    get_arch("tinyllama-1.1b"),
+    name="llama-serve-demo",
+    num_layers=8, d_model=384, num_heads=6, num_kv_heads=2,
+    d_ff=1024, vocab_size=8192,
+)
+
+
+def main():
+    print(f"[serve_lm] {ARCH_SMALL.name}: "
+          f"{ARCH_SMALL.param_count()/1e6:.1f}M params")
+    tokens, stats = serve(ARCH_SMALL, prompt_len=64, gen_len=48, batch=8)
+    print(f"[serve_lm] generated {tokens.shape[0]} x {tokens.shape[1]} "
+          f"tokens; prefill {stats['prefill_s']*1e3:.0f} ms; "
+          f"decode {stats['decode_tok_per_s']:.1f} tok/s")
+    print("[serve_lm] first sequence:", tokens[0][:16].tolist(), "...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""End-to-end driver: train a ~100M-parameter llama-family model for a few
+hundred steps on the synthetic pipeline, with checkpointing and restart.
+
+This is the deliverable-(b) end-to-end example: real config, real data
+pipeline, sharded AdamW, atomic checkpoints, loss that actually falls.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+import dataclasses
+
+from repro.configs import get_arch
+from repro.launch.train import train
+
+# ~100M params: 12 x 512 llama-style (GQA 8:4), vocab 32k
+ARCH_100M = dataclasses.replace(
+    get_arch("tinyllama-1.1b"),
+    name="llama-100m",
+    num_layers=12, d_model=512, num_heads=8, num_kv_heads=4,
+    d_ff=1536, vocab_size=32000,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    print(f"[train_lm] {ARCH_100M.name}: "
+          f"{ARCH_100M.param_count()/1e6:.0f}M params")
+    res = train(ARCH_100M, steps=args.steps, seq_len=args.seq,
+                global_batch=args.batch, lr=1e-3,
+                ckpt_dir=args.ckpt_dir, ckpt_interval=100)
+    first = sum(res.losses[:10]) / max(len(res.losses[:10]), 1)
+    last = sum(res.losses[-10:]) / max(len(res.losses[-10:]), 1)
+    print(f"[train_lm] loss {first:.3f} -> {last:.3f} over "
+          f"{res.steps_run} steps ({res.tokens_per_second:.0f} tok/s)")
+    assert last < first, "loss did not decrease"
+
+
+if __name__ == "__main__":
+    main()

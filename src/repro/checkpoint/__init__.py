@@ -1,0 +1,10 @@
+from repro.checkpoint.checkpoint import (
+    CheckpointManager,
+    load_checkpoint,
+    save_checkpoint,
+    latest_step,
+)
+from repro.checkpoint.elastic import reshard_tree
+
+__all__ = ["CheckpointManager", "save_checkpoint", "load_checkpoint",
+           "latest_step", "reshard_tree"]

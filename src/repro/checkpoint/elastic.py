@@ -1,0 +1,31 @@
+"""Elastic re-meshing: restore any checkpoint onto any mesh factorisation.
+
+Checkpoints store unsharded logical arrays (per-host shard files union to the
+logical array), so elasticity reduces to device_put with the NEW plan's
+PartitionSpecs. ``reshard_tree`` is also used live when the runtime shrinks
+the data-parallel group after a failure (straggler/fault harness).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+def reshard_tree(tree: Any, specs: Any, mesh: Mesh) -> Any:
+    """device_put every leaf with its (possibly new) PartitionSpec."""
+    def put(leaf, spec):
+        if spec is None:
+            spec = PartitionSpec()
+        return jax.device_put(leaf, NamedSharding(mesh, spec))
+    return jax.tree.map(put, tree, specs,
+                        is_leaf=lambda x: x is None or isinstance(
+                            x, PartitionSpec))
+
+
+def shrink_batch_for_mesh(global_batch: int, old_dp: int, new_dp: int) -> int:
+    """Elastic shrink keeps per-replica batch constant: the global batch
+    scales with the surviving data-parallel degree."""
+    per_replica = global_batch // old_dp
+    return per_replica * new_dp

@@ -1,0 +1,37 @@
+"""SAMO core — the paper's primary contribution, re-targeted to TPU meshes.
+
+Pipeline: parser (graph_builder) -> HD-Graph -> optimiser (brute-force /
+simulated annealing / rule-based) over V = {C, s^I, s^O, k} under Eq. 6-10
+constraints -> exporter -> ShardingPlan consumed by launch/{dryrun,train,serve}.
+"""
+from repro.core.platform import Platform, AbstractPlatform, V5E_POD, V5E_2POD
+from repro.core.hdgraph import (
+    HDGraph,
+    Node,
+    Variables,
+    partitions_from_cuts,
+    resource_minimal,
+)
+from repro.core.graph_builder import build_hdgraph
+from repro.core.perfmodel import ModelOptions, NodeEval, eval_nodes, node_eval
+from repro.core.objectives import Evaluation, Problem
+from repro.core.backends import BACKENDS, MEGATRON, SIMPLE, SPMD, Backend
+from repro.core.optimizers import (
+    OPTIMIZERS,
+    OptimResult,
+    brute_force,
+    repair,
+    rule_based,
+    simulated_annealing,
+)
+
+__all__ = [
+    "Platform", "AbstractPlatform", "V5E_POD", "V5E_2POD",
+    "HDGraph", "Node", "Variables", "partitions_from_cuts", "resource_minimal",
+    "build_hdgraph",
+    "ModelOptions", "NodeEval", "eval_nodes", "node_eval",
+    "Evaluation", "Problem",
+    "BACKENDS", "MEGATRON", "SIMPLE", "SPMD", "Backend",
+    "OPTIMIZERS", "OptimResult", "brute_force", "repair", "rule_based",
+    "simulated_annealing",
+]

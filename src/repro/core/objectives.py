@@ -1,0 +1,173 @@
+"""Objectives (paper §III-D, Eq. 2-4) and the Problem bundle.
+
+``Problem`` ties together graph + platform + backend rules + objective and is
+the single evaluation interface all three optimisers use. Evaluation returns
+an ``Evaluation`` carrying the objective value O(V) (Eq. 5: lower is better
+for both objectives — throughput is negated per Eq. 4), the constraint
+report, and diagnostic breakdowns.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+from repro.core import constraints as C
+from repro.core.hdgraph import HDGraph, Variables, partitions_from_cuts
+from repro.core.perfmodel import (
+    ModelOptions,
+    NodeEval,
+    eval_nodes,
+    partition_time,
+    t_conf,
+)
+from repro.core.platform import Platform
+
+
+@dataclass(frozen=True)
+class Evaluation:
+    objective: float                      # O(V), lower is better (Eq. 5)
+    feasible: bool
+    violations: Tuple[str, ...]
+    partition_times: Tuple[float, ...]    # T(P_i), Eq. 2
+    reconf_time: float                    # |C| * t_conf
+    latency: float                        # Eq. 3
+    throughput: float                     # positive items/s (Eq. 4 un-negated)
+    node_evals: Tuple[NodeEval, ...] = ()
+
+    @property
+    def total_chips(self) -> int:
+        return sum(e.chips for e in self.node_evals)
+
+
+@dataclass
+class Problem:
+    """One optimisation instance (paper Eq. 5)."""
+
+    graph: HDGraph
+    platform: Platform
+    backend: "Backend"                    # forward ref (core/backends.py)
+    objective: str = "throughput"         # latency | throughput
+    exec_model: str = "streaming"         # streaming | spmd
+    batch_amortisation: int = 256         # B in Eq. 4 (batches per config sweep)
+    opts: ModelOptions = field(default_factory=ModelOptions)
+
+    _eval_count: int = 0                  # points/s accounting (Table IV)
+    _cache: dict = field(default_factory=dict, repr=False)
+    _cache_cap: int = 200_000
+
+    # ------------------------------------------------------------------
+    def check(self, v: Variables) -> C.ConstraintReport:
+        cached = self._cache.get(("check", v))
+        if cached is not None:
+            return cached
+        rep = C.ConstraintReport()
+        evals = self._eval_nodes(v)
+        C.check_channel_factor(self.graph, v, self.platform, rep,
+                               strict_kv=self.backend.strict_kv)
+        if self.backend.intra_matching:
+            C.check_intra_matching(self.graph, v, rep)
+        if self.backend.inter_matching:
+            C.check_inter_matching(self.graph, v, rep)
+        if self.backend.scan_tying:
+            C.check_scan_tying(self.graph, v, rep)
+        C.check_resource(self.graph, v, self.platform, evals, self.exec_model, rep)
+        C.check_bandwidth(self.graph, v, self.platform, evals, self.exec_model, rep)
+        if len(self._cache) < self._cache_cap:
+            self._cache[("check", v)] = rep
+        return rep
+
+    def _eval_nodes(self, v: Variables):
+        """eval_nodes with per-(node, fold-triple) memoisation — probes
+        change one scope at a time, so most triples repeat."""
+        memo = self._cache.setdefault("node_memo", {})
+        out = []
+        for i, n in enumerate(self.graph.nodes):
+            key = (i, v.s_in[i], v.s_out[i], v.kern[i])
+            e = memo.get(key)
+            if e is None:
+                from repro.core.perfmodel import node_eval
+                e = node_eval(n, key[1], key[2], key[3], self.platform,
+                              self.graph.mode, self.opts)
+                memo[key] = e
+            out.append(e)
+        return out
+
+    def evaluate(self, v: Variables, with_nodes: bool = False) -> Evaluation:
+        cached = self._cache.get(v)
+        if cached is not None:
+            return cached
+        self._eval_count += 1
+        evals = self._eval_nodes(v)
+        rep = C.ConstraintReport()
+        C.check_channel_factor(self.graph, v, self.platform, rep,
+                               strict_kv=self.backend.strict_kv)
+        if self.backend.intra_matching:
+            C.check_intra_matching(self.graph, v, rep)
+        if self.backend.inter_matching:
+            C.check_inter_matching(self.graph, v, rep)
+        if self.backend.scan_tying:
+            C.check_scan_tying(self.graph, v, rep)
+        C.check_resource(self.graph, v, self.platform, evals, self.exec_model, rep)
+        C.check_bandwidth(self.graph, v, self.platform, evals, self.exec_model, rep)
+
+        parts = partitions_from_cuts(self.graph, v.cuts)
+        p_times = []
+        for part in parts:
+            t = partition_time(self.graph, part, evals, self.exec_model)
+            # backends without inter-matching pay resharding collectives at
+            # layout changes inside the partition (spmd backend, Table II).
+            if not self.backend.inter_matching:
+                t += self._resharding_time(v, part, evals)
+            p_times.append(t)
+        reconf = sum(
+            t_conf(self.graph, part, v, self.platform) for part in parts[1:]
+        )  # |C| swaps: first configuration is pre-loaded (paper Eq. 3)
+
+        latency = sum(p_times) + reconf                        # Eq. 3
+        Bam = self.batch_amortisation
+        thr_time = Bam * sum(p_times) + reconf                 # Eq. 4 denominator
+        throughput = Bam / thr_time if thr_time > 0 else 0.0
+
+        obj = latency if self.objective == "latency" else -throughput
+        result = Evaluation(
+            objective=obj,
+            feasible=rep.ok,
+            violations=tuple(rep.violations),
+            partition_times=tuple(p_times),
+            reconf_time=reconf,
+            latency=latency,
+            throughput=throughput,
+            node_evals=tuple(evals),
+        )
+        if len(self._cache) < self._cache_cap:
+            self._cache[v] = result
+        return result
+
+    def _resharding_time(self, v: Variables, part, evals) -> float:
+        """Cost of an activation-layout change between adjacent nodes inside
+        one compiled partition (spmd backend: inter matching not enforced).
+
+        Priced at GSPMD's observed fallback for arbitrary sharding
+        transitions — "involuntary full rematerialization": the tensor is
+        replicated (all-gather of the full featuremap) and re-partitioned.
+        Per-chip traffic = the FULL boundary featuremap. This is deliberately
+        punitive: it matches what XLA actually emits, and it drives the
+        optimiser towards layout-uniform partitions (DESIGN.md §2)."""
+        t = 0.0
+
+        def b_in(i: int) -> int:
+            return 1 if self.graph.nodes[i].internal_rows else v.s_in[i]
+
+        for a, b in zip(part[:-1], part[1:]):
+            if b_in(a) != b_in(b) or v.kern[a] != v.kern[b]:
+                na = self.graph.nodes[a]
+                rows = na.rows if self.graph.mode != "decode" else 1
+                if na.internal_rows:
+                    rows = 1
+                full = na.batch * rows * na.fm_width * 2.0
+                t += full / self.platform.ici_bw
+        return t
+
+    @property
+    def evals_done(self) -> int:
+        return self._eval_count

@@ -1,0 +1,59 @@
+"""End-to-end SAMO pipeline: parse -> optimise -> export.
+
+This is the public API the launcher and examples call:
+
+    plan = optimise_mapping(arch, shape, platform, backend="spmd",
+                            optimiser="rule_based", objective="throughput")
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.core.backends import BACKENDS
+from repro.core.exporter import ShardingPlan, default_plan, export_plan
+from repro.core.graph_builder import build_hdgraph
+from repro.core.objectives import Problem
+from repro.core.optimizers import OPTIMIZERS
+from repro.core.perfmodel import ModelOptions
+from repro.core.platform import Platform, V5E_POD
+
+
+def make_problem(arch: ArchConfig, shape: ShapeSpec,
+                 platform: Platform = V5E_POD,
+                 backend: str = "spmd",
+                 objective: str = "throughput",
+                 exec_model: str = "streaming",
+                 opts: Optional[ModelOptions] = None) -> Problem:
+    graph = build_hdgraph(arch, shape)
+    return Problem(
+        graph=graph,
+        platform=platform,
+        backend=BACKENDS[backend],
+        objective=objective,
+        exec_model=exec_model,
+        opts=opts or ModelOptions(),
+    )
+
+
+def optimise_mapping(arch: ArchConfig, shape: ShapeSpec,
+                     platform: Platform = V5E_POD,
+                     backend: str = "spmd",
+                     optimiser: str = "rule_based",
+                     objective: str = "throughput",
+                     exec_model: str = "streaming",
+                     opts: Optional[ModelOptions] = None,
+                     **optimiser_kwargs) -> ShardingPlan:
+    problem = make_problem(arch, shape, platform, backend, objective,
+                           exec_model, opts)
+    result = OPTIMIZERS[optimiser](problem, **optimiser_kwargs)
+    return export_plan(problem.graph, result.variables, platform,
+                       exec_model, result.evaluation)
+
+
+def baseline_plan(arch: ArchConfig, shape: ShapeSpec,
+                  platform: Platform = V5E_POD,
+                  exec_model: str = "spmd") -> ShardingPlan:
+    """Unoptimised (paper Table V *init.*) single-partition pure-DP plan."""
+    graph = build_hdgraph(arch, shape)
+    return default_plan(graph, platform, exec_model=exec_model)

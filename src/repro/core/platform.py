@@ -1,0 +1,137 @@
+"""Target platform description (the FPGA-device analogue).
+
+The paper's platform triple (resource vector, bandwidth, reconfiguration time)
+maps to a TPU pod slice: per-chip HBM capacity, HBM/ICI/DMA bandwidths, and
+the weight-streaming swap bandwidth that defines ``t_conf``.
+
+Hardware constants follow the assignment brief: 197 TFLOP/s bf16 per chip,
+819 GB/s HBM, ~50 GB/s per ICI link.
+"""
+from __future__ import annotations
+
+import functools
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, FrozenSet, List, Sequence, Tuple
+
+
+@functools.lru_cache(maxsize=64)
+def _realizable_folds(mesh_axes: Tuple[Tuple[str, int], ...]
+                      ) -> Dict[int, List[FrozenSet[str]]]:
+    out: Dict[int, List[FrozenSet[str]]] = {}
+    names = tuple(n for n, _ in mesh_axes)
+    sizes = dict(mesh_axes)
+    for r in range(len(names) + 1):
+        for combo in itertools.combinations(names, r):
+            prod = 1
+            for a in combo:
+                prod *= sizes[a]
+            out.setdefault(prod, []).append(frozenset(combo))
+    return out
+
+
+@functools.lru_cache(maxsize=200_000)
+def _assign_axes(mesh_axes: Tuple[Tuple[str, int], ...],
+                 folds: Tuple[int, ...]):
+    table = _realizable_folds(mesh_axes)
+    chosen: List[FrozenSet[str]] = []
+
+    def rec(i: int, used: FrozenSet[str]) -> bool:
+        if i == len(folds):
+            return True
+        f = folds[i]
+        for subset in sorted(table.get(f, []), key=lambda s: sorted(s)):
+            if subset & used:
+                continue
+            chosen.append(subset)
+            if rec(i + 1, used | subset):
+                return True
+            chosen.pop()
+        return False
+
+    ok = rec(0, frozenset())
+    return (tuple(chosen), ok) if ok else ((), False)
+
+
+@dataclass(frozen=True)
+class Platform:
+    name: str = "tpu-v5e-256"
+    # mesh axes as ((name, size), ...) — must match launch/mesh.py
+    mesh_axes: Tuple[Tuple[str, int], ...] = (("data", 16), ("model", 16))
+    peak_flops: float = 197e12          # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9               # bytes/s per chip
+    hbm_bytes: float = 16 * 2**30       # per chip
+    ici_bw: float = 50e9                # bytes/s per link (roofline convention)
+    dma_bw: float = 6.25e9              # host->HBM bytes/s per chip (weight streaming)
+    reconf_fixed_s: float = 0.010       # per-swap overhead: program switch +
+                                        # global barrier + DMA ramp (the TPU
+                                        # analogue of the FPGA bitstream load)
+    vmem_bytes: float = 128 * 2**20     # per core, Pallas working-set budget
+
+    @property
+    def chips(self) -> int:
+        n = 1
+        for _, s in self.mesh_axes:
+            n *= s
+        return n
+
+    @property
+    def axis_names(self) -> Tuple[str, ...]:
+        return tuple(n for n, _ in self.mesh_axes)
+
+    @property
+    def axis_sizes(self) -> Dict[str, int]:
+        return dict(self.mesh_axes)
+
+    # ------------------------------------------------------------------
+    # Mesh-realisable folds: a folding factor is realisable iff it is the
+    # product of a subset of mesh-axis sizes (the TPU channel-factor rule).
+    # ------------------------------------------------------------------
+    def realizable_folds(self) -> Dict[int, List[FrozenSet[str]]]:
+        """fold value -> list of axis subsets achieving it (memoised)."""
+        return _realizable_folds(self.mesh_axes)
+
+    def fold_values(self) -> List[int]:
+        return sorted(self.realizable_folds())
+
+    def assign_axes(
+        self, folds: Sequence[int]
+    ) -> Tuple[Tuple[FrozenSet[str], ...], bool]:
+        """Assign disjoint mesh-axis subsets realising each fold in `folds`.
+
+        Returns (assignment, ok). The product of all folds must not exceed
+        the mesh, and every fold must map to its own disjoint axis subset.
+        Deterministic: earlier folds get first pick in sorted-subset order.
+        Memoised — the optimiser probes the same triples millions of times.
+        """
+        return _assign_axes(self.mesh_axes, tuple(folds))
+
+    def folds_realizable(self, folds: Sequence[int]) -> bool:
+        return self.assign_axes(folds)[1]
+
+
+# Single-pod production platform (16 x 16 = 256 chips).
+V5E_POD = Platform()
+
+# Two-pod platform (2 x 16 x 16 = 512 chips); the "pod" axis carries pure
+# data parallelism with hierarchically staged gradient reduction.
+V5E_2POD = Platform(
+    name="tpu-v5e-2x256",
+    mesh_axes=(("pod", 2), ("data", 16), ("model", 16)),
+)
+
+
+@dataclass(frozen=True)
+class AbstractPlatform(Platform):
+    """Platform whose folds are unrestricted divisors (the paper's FPGA-style
+    space, used for the Table-IV design-space-size benchmark). Realisability
+    reduces to 'product of folds <= chips'."""
+
+    def folds_realizable(self, folds: Sequence[int]) -> bool:  # type: ignore[override]
+        prod = 1
+        for f in folds:
+            prod *= f
+        return prod <= self.chips
+
+    def fold_values(self) -> List[int]:  # type: ignore[override]
+        return list(range(1, self.chips + 1))

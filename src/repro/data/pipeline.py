@@ -1,0 +1,91 @@
+"""Deterministic sharded synthetic token pipeline.
+
+Fault-tolerance contract: batch content is a pure function of (seed, step,
+host shard), so a restart resumes from any step with O(1) ``skip_to`` — no
+replay, no data loss, and elastic re-sharding (changing host count) keeps
+the global batch stream identical.
+
+The synthetic stream is a Zipf-ish mixture over the vocab with a repeating
+n-gram backbone so the LM loss actually decreases during the example runs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+import jax.numpy as jnp
+
+
+@dataclass
+class DataPipeline:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    host_index: int = 0
+    host_count: int = 1
+    prefetch: int = 2
+
+    def __post_init__(self):
+        if self.global_batch % self.host_count:
+            raise ValueError("global_batch must divide evenly across hosts")
+        self.local_batch = self.global_batch // self.host_count
+        self._step = 0
+
+    # ------------------------------------------------------------------
+    def batch_at(self, step: int) -> Dict[str, jnp.ndarray]:
+        """Pure function of (seed, step, host shard): the FT contract."""
+        rows = []
+        for b in range(self.local_batch):
+            global_row = self.host_index * self.local_batch + b
+            rng = np.random.default_rng(
+                np.random.SeedSequence([self.seed, step, global_row]))
+            rows.append(self._sequence(rng))
+        tokens = np.stack(rows)                             # (local_B, S+1)
+        return {
+            "tokens": jnp.asarray(tokens[:, :-1], jnp.int32),
+            "labels": jnp.asarray(tokens[:, 1:], jnp.int32),
+        }
+
+    def _sequence(self, rng: np.random.Generator) -> np.ndarray:
+        S = self.seq_len + 1
+        V = self.vocab_size
+        # repeating n-gram backbone + Zipf noise => learnable structure
+        period = 16
+        motif = rng.integers(2, min(V, 512), period)
+        seq = np.tile(motif, S // period + 1)[:S].copy()
+        noise_mask = rng.random(S) < 0.15
+        zipf = np.minimum(rng.zipf(1.5, S) + 1, V - 1)
+        seq[noise_mask] = zipf[noise_mask]
+        return seq.astype(np.int32)
+
+    # ------------------------------------------------------------------
+    def __iter__(self) -> Iterator[Dict[str, jnp.ndarray]]:
+        while True:
+            yield self.next_batch()
+
+    def next_batch(self) -> Dict[str, jnp.ndarray]:
+        out = self.batch_at(self._step)
+        self._step += 1
+        return out
+
+    def skip_to(self, step: int) -> None:
+        """O(1) restart positioning (no replay)."""
+        self._step = step
+
+    @property
+    def step(self) -> int:
+        return self._step
+
+    def reshard(self, host_index: int, host_count: int) -> "DataPipeline":
+        """Elastic re-sharding: same global stream, new host layout."""
+        return DataPipeline(self.vocab_size, self.seq_len, self.global_batch,
+                            self.seed, host_index, host_count, self.prefetch)
+
+
+def make_pipeline(arch, shape, seed: int = 0, host_index: int = 0,
+                  host_count: int = 1) -> DataPipeline:
+    return DataPipeline(arch.vocab_size, shape.seq_len, shape.global_batch,
+                        seed, host_index, host_count)

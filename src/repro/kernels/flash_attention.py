@@ -1,0 +1,131 @@
+"""Flash attention for TPU (Pallas): blocked online-softmax GQA attention.
+
+TPU-native re-think of the GPU flash algorithm (no warps / shared-memory
+banking): K and V stream through VMEM in `block_k`-row tiles while a q tile
+stays resident; the online-softmax accumulator (acc, m, l) lives in VMEM
+scratch that persists across the sequential minor grid dimension. Matmul
+shapes (block_q x dh) @ (dh x block_k) are MXU-aligned (blocks are multiples
+of 128 lanes / 8 sublanes).
+
+Layout contract (wrapper in ops.py handles transposes/padding):
+  q: (B*H,  Sq, dh)   k, v: (B*Hkv, Skv, dh)   out: (B*H, Sq, dh)
+GQA mapping: q row b*H+h reads kv row b*Hkv + h // (H // Hkv).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  sm_scale: float, causal: bool, block_q: int, block_k: int,
+                  seq_q: int, seq_k: int, nk: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_first = qi * block_q
+    k_first = ki * block_k
+    # skip kv blocks entirely above the causal diagonal
+    needed = (not causal) or (k_first <= q_first + block_q - 1)
+
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                 # (bq, dh)
+        k = k_ref[0].astype(jnp.float32)                 # (bk, dh)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+        s = s * sm_scale
+
+        qpos = q_first + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = k_first + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        valid = kpos < seq_k
+        if causal:
+            valid = jnp.logical_and(valid, kpos <= qpos)
+        valid = jnp.logical_and(valid, qpos < seq_q)
+        s = jnp.where(valid, s, NEG_INF)
+
+        m_prev = m_ref[:, :1]                            # (bq, 1)
+        l_prev = l_ref[:, :1]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(valid, p, 0.0)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + p @ v
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    if causal:
+        pl.when(needed)(_compute)
+    else:
+        _compute()
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_ref[:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)                  # fully-masked rows
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_bh(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                       causal: bool, sm_scale: float, group: int,
+                       block_q: int = 256, block_k: int = 256,
+                       seq_q: int = 0, seq_k: int = 0,
+                       interpret: bool = False) -> jax.Array:
+    """Core pallas_call on (B*H, S, dh)-collapsed operands.
+
+    ``seq_q``/``seq_k`` are the TRUE (pre-padding) lengths; 0 means the
+    operand is unpadded. Padded K rows beyond seq_k MUST be masked here —
+    they are zero vectors whose exp(0) would otherwise pollute the softmax
+    denominator."""
+    BH, Sq, dh = q.shape
+    BHkv, Skv, _ = k.shape
+    seq_q = seq_q or Sq
+    seq_k = seq_k or Skv
+
+    block_q = min(block_q, max(8, 1 << (Sq - 1).bit_length()))
+    block_k = min(block_k, max(128, 1 << (Skv - 1).bit_length()))
+    nq = math.ceil(Sq / block_q)
+    nk = math.ceil(Skv / block_k)
+    grid = (BH, nq, nk)
+
+    kernel = functools.partial(
+        _flash_kernel, sm_scale=sm_scale, causal=causal,
+        block_q=block_q, block_k=block_k, seq_q=seq_q, seq_k=seq_k, nk=nk)
+
+    def kv_map(bh, qi, ki):
+        return (bh // group if group > 1 else bh, ki, 0)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, dh), kv_map),
+            pl.BlockSpec((1, block_k, dh), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dh), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, dh), jnp.float32),     # acc
+            pltpu.VMEM((block_q, 128), jnp.float32),    # m (running max)
+            pltpu.VMEM((block_q, 128), jnp.float32),    # l (running denom)
+        ],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ) if not interpret else None,
+    )(q, k, v)

@@ -1,0 +1,101 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels run in interpret mode; on TPU they lower
+to Mosaic. ``use_pallas()`` gates kernel use for the XLA dry-run, which
+compiles the pure-jnp reference path instead (Pallas custom-calls would hide
+FLOPs from cost_analysis).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_bh
+from repro.kernels.rwkv6_scan import wkv6_bh
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def _flash_jit(q, k, v, *, causal, block_q, block_k, interpret):
+    B, Sq, H, dh = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    group = H // Hkv
+    sm_scale = 1.0 / math.sqrt(dh)
+
+    qt = jnp.transpose(q, (0, 2, 1, 3)).reshape(B * H, Sq, dh)
+    kt = jnp.transpose(k, (0, 2, 1, 3)).reshape(B * Hkv, Skv, dh)
+    vt = jnp.transpose(v, (0, 2, 1, 3)).reshape(B * Hkv, Skv, dh)
+
+    # MXU lane alignment: pad head_dim to a multiple of 128, seqs to blocks
+    qt = _pad_to(_pad_to(qt, 2, 128), 1, block_q)
+    kt = _pad_to(_pad_to(kt, 2, 128), 1, block_k)
+    vt = _pad_to(_pad_to(vt, 2, 128), 1, block_k)
+
+    o = flash_attention_bh(qt, kt, vt, causal=causal, sm_scale=sm_scale,
+                           group=group, block_q=block_q, block_k=block_k,
+                           seq_q=Sq, seq_k=Skv, interpret=interpret)
+    o = o[:, :Sq, :dh].reshape(B, H, Sq, dh)
+    return jnp.transpose(o, (0, 2, 1, 3))
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, q_offset=0,
+                    block_q: int = 256, block_k: int = 256,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """Drop-in for ref.attention. Falls back to the oracle for decode-style
+    calls (dynamic q_offset) where a 1-row q tile has no MXU benefit."""
+    if not isinstance(q_offset, int) or q_offset != 0:
+        return ref.attention(q, k, v, causal=causal, q_offset=q_offset)
+    if interpret is None:
+        interpret = _on_cpu()
+    return _flash_jit(q, k, v, causal=causal, block_q=block_q,
+                      block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def _wkv6_jit(r, k, v, w, u, *, chunk, interpret):
+    B, T, H, hs = r.shape
+    rt = jnp.transpose(r, (0, 2, 1, 3)).reshape(B * H, T, hs)
+    kt = jnp.transpose(k, (0, 2, 1, 3)).reshape(B * H, T, hs)
+    vt = jnp.transpose(v, (0, 2, 1, 3)).reshape(B * H, T, hs)
+    wt = jnp.transpose(w, (0, 2, 1, 3)).reshape(B * H, T, hs)
+
+    pad = (-T) % chunk
+    if pad:
+        rt = jnp.pad(rt, ((0, 0), (0, pad), (0, 0)))
+        kt = jnp.pad(kt, ((0, 0), (0, pad), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, pad), (0, 0)))
+        wt = jnp.pad(wt, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+
+    ub = jnp.broadcast_to(u[None, :, :], (B, H, hs)).reshape(B * H, 1, hs)
+    o = wkv6_bh(rt, kt, vt, wt, ub, chunk=chunk, interpret=interpret)
+    o = o[:, :T].reshape(B, H, T, hs)
+    return jnp.transpose(o, (0, 2, 1, 3))
+
+
+def rwkv6(r, k, v, w, u, *, chunk: int = 128,
+          interpret: Optional[bool] = None) -> jax.Array:
+    """Drop-in for ref.rwkv6 (zero initial state; returns outputs only)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    c = min(chunk, max(8, r.shape[1]))
+    return _wkv6_jit(r, k, v, w, u, chunk=c, interpret=interpret)

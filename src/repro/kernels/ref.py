@@ -1,0 +1,126 @@
+"""Pure-jnp oracles for every Pallas kernel (and the XLA fallback path the
+CPU dry-run compiles). Each kernel test sweeps shapes/dtypes and asserts
+allclose against these."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, q_offset=0) -> jax.Array:
+    """Reference GQA attention.
+
+    q: (B, Sq, H, dh); k, v: (B, Skv, Hkv, dh). Returns (B, Sq, H, dh).
+    ``q_offset`` is the absolute position of q[0] (decode: cache write pos).
+    """
+    B, Sq, H, dh = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    group = H // Hkv
+    qf = q.astype(jnp.float32)
+    kf = jnp.repeat(k.astype(jnp.float32), group, axis=2)
+    vf = jnp.repeat(v.astype(jnp.float32), group, axis=2)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", qf, kf) / jnp.sqrt(dh).astype(jnp.float32)
+    if causal:
+        qpos = jnp.arange(Sq)[:, None] + q_offset
+        kpos = jnp.arange(Skv)[None, :]
+        mask = kpos <= qpos                     # (Sq, Skv)
+        scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vf)
+    return out.astype(q.dtype)
+
+
+def rwkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+          u: jax.Array, state: Optional[jax.Array] = None):
+    """Reference WKV6 recurrence (Finch, data-dependent decay).
+
+    r, k, v, w: (B, T, H, hs); u: (H, hs) bonus. state: (B, H, hs, hs) or None.
+    Per step (head h):  out_t = r_t @ (S + u ⊙ k_t v_t^T)
+                        S    <- diag(w_t) S + k_t v_t^T
+    with w_t already the decay multiplier in (0, 1).
+    Returns (out (B,T,H,hs), final_state (B,H,hs,hs)).
+    """
+    B, T, H, hs = r.shape
+    rf, kf, vf, wf = (x.astype(jnp.float32) for x in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+    if state is None:
+        state = jnp.zeros((B, H, hs, hs), jnp.float32)
+    else:
+        state = state.astype(jnp.float32)
+
+    def step(S, xs):
+        r_t, k_t, v_t, w_t = xs                 # (B, H, hs)
+        kv = k_t[..., :, None] * v_t[..., None, :]      # (B,H,hs,hs)
+        att = S + uf[None, :, :, None] * kv
+        out_t = jnp.einsum("bhk,bhkv->bhv", r_t, att)
+        S = w_t[..., :, None] * S + kv
+        return S, out_t
+
+    xs = tuple(jnp.moveaxis(x, 1, 0) for x in (rf, kf, vf, wf))
+    final, outs = jax.lax.scan(step, state, xs)
+    out = jnp.moveaxis(outs, 0, 1)              # (B, T, H, hs)
+    return out.astype(r.dtype), final
+
+
+def attention_chunked(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, q_offset=0,
+                      block_k: int = 1024) -> jax.Array:
+    """Online-softmax attention, scanned over KV blocks in pure jnp.
+
+    The XLA-side realisation of the flash algorithm: peak memory is
+    O(S x block_k) instead of O(S^2), so 32k-prefill and full-batch
+    training fit HBM. Matches ``attention`` to fp32 accumulation error.
+    q: (B, Sq, H, dh); k, v: (B, Skv, Hkv, dh).
+    """
+    B, Sq, H, dh = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    group = H // Hkv
+    nb = -(-Skv // block_k)
+    pad = nb * block_k - Skv
+
+    qf = q.astype(jnp.float32) / jnp.sqrt(dh).astype(jnp.float32)
+    kf = jnp.pad(k.astype(jnp.float32), ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vf = jnp.pad(v.astype(jnp.float32), ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kf = kf.reshape(B, nb, block_k, Hkv, dh)
+    vf = vf.reshape(B, nb, block_k, Hkv, dh)
+
+    qpos = jnp.arange(Sq)[:, None] + q_offset          # (Sq, 1)
+
+    def body(carry, blk):
+        acc, m, l = carry
+        kb, vb, kpos = blk                              # (B,bk,Hkv,dh), (bk,)
+        kb = jnp.repeat(kb, group, axis=2)              # (B,bk,H,dh)
+        vb = jnp.repeat(vb, group, axis=2)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kb)       # (B,H,Sq,bk)
+        valid = (kpos[None, :] < Skv)
+        if causal:
+            valid = jnp.logical_and(valid, kpos[None, :] <= qpos)
+        s = jnp.where(valid[None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # fully-masked rows keep m=-inf; guard the exp
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(valid[None, None], p, 0.0)
+        alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhqk,bkhd->bhqd", p, vb)
+        return (acc, m_new, l), None
+
+    acc0 = jnp.zeros((B, H, Sq, dh), jnp.float32)
+    m0 = jnp.full((B, H, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    kpos = jnp.arange(nb * block_k).reshape(nb, block_k)
+    (acc, m, l), _ = jax.lax.scan(
+        body, (acc0, m0, l0),
+        (jnp.moveaxis(kf, 1, 0), jnp.moveaxis(vf, 1, 0), kpos))
+    out = acc / jnp.where(l == 0.0, 1.0, l)[..., None]
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)     # (B,Sq,H,dh)
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)

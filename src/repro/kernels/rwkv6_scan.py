@@ -1,0 +1,95 @@
+"""RWKV6 (Finch) WKV recurrence for TPU (Pallas): chunked linear attention
+with data-dependent per-channel decay.
+
+TPU-native design: the (hs x hs) per-head state lives in VMEM scratch and
+persists across the sequential time-chunk grid dimension; each grid step
+loads a (chunk, hs) tile of r/k/v/w into VMEM. Within a chunk the recurrence
+factorises into
+  intra-chunk:  lower-triangular decay-weighted attention (MXU matmuls)
+  inter-chunk:  readout of the carried state + one state update per chunk
+so the sequential dependency is per-chunk (T/C steps), not per-token, and all
+inner ops are (chunk x hs)@(hs x hs) MXU shapes.
+
+Layout contract (ops.py wraps): r,k,v,w: (B*H, T, hs); u: (hs,) per-call is
+broadcast — we pass u as (B*H, hs) tiled by the wrapper. T % chunk == 0
+(wrapper pads with w=1, k=0).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_ref, *,
+                 chunk: int, hs: int, nc: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0].astype(jnp.float32)          # (C, hs)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)          # decay multipliers in (0,1]
+    u = u_ref[0].astype(jnp.float32)          # (1, hs) bonus row
+
+    # log-domain cumulative decay within the chunk:
+    #   d[t] = prod_{s<=t} w[s]  (per k-channel)
+    logw = jnp.log(jnp.maximum(w, 1e-38))
+    cum = jnp.cumsum(logw, axis=0)            # (C, hs), inclusive
+    d_incl = jnp.exp(cum)
+    d_excl = jnp.exp(cum - logw)              # exclusive: prod_{s<t}
+
+    # ---- inter-chunk: readout of carried state -----------------------
+    S = s_ref[...]                            # (hs, hs)
+    out = (r * d_excl) @ S                    # (C, hs_v)
+
+    # ---- intra-chunk: decay-weighted causal linear attention ---------
+    # att[t, s] = sum_c r[t,c] k[s,c] * d_excl[t,c]/d_incl[s,c]  for s < t
+    #           + sum_c r[t,c] k[t,c] * u[c]                      for s == t
+    rd = r * d_excl                           # (C, hs)
+    kd = k / jnp.maximum(d_incl, 1e-38)       # (C, hs)
+    att = jax.lax.dot_general(rd, kd, (((1,), (1,)), ((), ())))   # (C, C)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) > \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    att = jnp.where(tri, att, 0.0)
+    diag = jnp.sum(r * k * u, axis=1)         # (C,)
+    out = out + att @ v + diag[:, None] * v
+
+    # ---- state update across the chunk --------------------------------
+    # S_new = diag(d_incl[C-1]) S + sum_s (k[s] * d_incl[C-1]/d_incl[s]) v[s]^T
+    d_last = d_incl[-1:, :]                   # (1, hs)
+    k_scaled = k * (d_last / jnp.maximum(d_incl, 1e-38))   # (C, hs)
+    s_ref[...] = d_last.T * S + jax.lax.dot_general(
+        k_scaled, v, (((0,), (0,)), ((), ())))
+
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+def wkv6_bh(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+            u: jax.Array, *, chunk: int = 128,
+            interpret: bool = False) -> jax.Array:
+    """r,k,v,w: (BH, T, hs) with T % chunk == 0; u: (BH, 1, hs)."""
+    BH, T, hs = r.shape
+    nc = T // chunk
+    grid = (BH, nc)
+    kernel = functools.partial(_wkv6_kernel, chunk=chunk, hs=hs, nc=nc)
+    data_spec = pl.BlockSpec((1, chunk, hs), lambda bh, ci: (bh, ci, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[data_spec, data_spec, data_spec, data_spec,
+                  pl.BlockSpec((1, 1, hs), lambda bh, ci: (bh, 0, 0))],
+        out_specs=data_spec,
+        out_shape=jax.ShapeDtypeStruct((BH, T, hs), r.dtype),
+        scratch_shapes=[pltpu.VMEM((hs, hs), jnp.float32)],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ) if not interpret else None,
+    )(r, k, v, w, u)

@@ -1,0 +1,60 @@
+"""Input ShapeDtypeStruct stand-ins for every (arch x shape) cell.
+
+``input_specs(arch, shape)`` returns the exact batch pytree the step function
+takes — weak-type-correct, shardable, and never allocated (the dry-run lowers
+against these). The modality frontends are STUBS per the brief:
+
+  whisper   ``frames`` carries precomputed log-mel frame embeddings
+            (B, num_frames, d_model) — the conv frontend is out of scope.
+  qwen2-vl  ``mrope_positions`` carries the 3D (temporal, height, width)
+            position ids the vision frontend would emit alongside the token
+            stream of patch embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def input_specs(arch: ArchConfig, shape: ShapeSpec,
+                batch_override: int = 0) -> Dict[str, Any]:
+    """Batch pytree of ShapeDtypeStructs for one cell."""
+    B = batch_override or shape.global_batch
+    mode = shape.mode
+    S = shape.seq_len if mode != "decode" else 1
+
+    batch: Dict[str, Any] = {"tokens": _sds((B, S), jnp.int32)}
+    if mode == "train":
+        batch["labels"] = _sds((B, S), jnp.int32)
+
+    if arch.frontend == "audio_stub" and mode != "decode":
+        F = arch.num_frames or 1500
+        batch["frames"] = _sds((B, F, arch.d_model), jnp.bfloat16)
+    if arch.mrope:
+        batch["mrope_positions"] = _sds((3, B, S), jnp.int32)
+    return batch
+
+
+def make_batch(arch: ArchConfig, shape: ShapeSpec, key: jax.Array,
+               batch_override: int = 0) -> Dict[str, Any]:
+    """Concrete random batch with the same structure (smoke tests)."""
+    specs = input_specs(arch, shape, batch_override)
+    out: Dict[str, Any] = {}
+    for name, sds in specs.items():
+        key, sub = jax.random.split(key)
+        if sds.dtype == jnp.int32:
+            hi = arch.vocab_size if name in ("tokens", "labels") else max(
+                sds.shape[-1], 2)
+            out[name] = jax.random.randint(sub, sds.shape, 0, hi, jnp.int32)
+        else:
+            out[name] = (jax.random.normal(sub, sds.shape, jnp.float32)
+                         .astype(sds.dtype))
+    return out

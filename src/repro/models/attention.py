@@ -1,0 +1,113 @@
+"""GQA attention (self / cross / encoder) with optional KV cache.
+
+The scaled-dot-product core dispatches to the Pallas flash-attention kernel
+(kernels/ops.py) when enabled, else to the pure-jnp oracle (kernels/ref.py) —
+the oracle is what XLA compiles in the CPU dry-run.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_mrope, apply_rope, block_norm, dense_init, init_norm
+
+
+def init_attention(key, d_model: int, num_heads: int, num_kv_heads: int,
+                   head_dim: int, norm: str, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d_model, num_heads * head_dim, dtype),
+        "wk": dense_init(ks[1], d_model, num_kv_heads * head_dim, dtype),
+        "wv": dense_init(ks[2], d_model, num_kv_heads * head_dim, dtype),
+        "wo": dense_init(ks[3], num_heads * head_dim, d_model, dtype),
+    }
+    p.update({f"ln_{k}": v for k, v in init_norm(d_model, norm, dtype).items()})
+    return p
+
+
+def sdpa(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool,
+         q_offset: int = 0, impl: str = "ref") -> jax.Array:
+    """q: (B,Sq,H,dh) k,v: (B,Skv,Hkv,dh) -> (B,Sq,H,dh).
+
+    impl: ref     — naive S x S softmax (oracle; O(S^2) memory)
+          chunked — online-softmax over KV blocks in pure jnp (XLA path
+                    with flash memory behaviour; what the dry-run lowers)
+          flash   — Pallas TPU kernel (interpret-mode on CPU)
+    """
+    if impl == "flash":
+        from repro.kernels import ops
+        return ops.flash_attention(q, k, v, causal=causal, q_offset=q_offset)
+    if impl == "chunked":
+        from repro.kernels import ref
+        return ref.attention_chunked(q, k, v, causal=causal,
+                                     q_offset=q_offset)
+    from repro.kernels import ref
+    return ref.attention(q, k, v, causal=causal, q_offset=q_offset)
+
+
+def attend(x: jax.Array, p: Dict[str, jax.Array], *,
+           num_heads: int, num_kv_heads: int, head_dim: int,
+           norm: str, causal: bool = True,
+           positions: Optional[jax.Array] = None,
+           rope_theta: float = 10000.0,
+           mrope_positions: Optional[jax.Array] = None,
+           kv_src: Optional[jax.Array] = None,
+           cache: Optional[Dict[str, jax.Array]] = None,
+           cache_pos: Optional[jax.Array] = None,
+           write_cross: bool = False,
+           attn_impl: str = "ref",
+           shard_fn=lambda a, role=None: a):
+    """One attention block with pre-norm and residual.
+
+    kv_src     cross-attention source (encoder output); None => self-attn.
+    cache      {"k","v"}: (B, L, Hkv, dh) decode caches. With cache_pos given,
+               new K/V are written at that position (decode step).
+    write_cross  prefill: (re)compute the cross-attention KV from kv_src and
+               store it; decode reads the stored cache instead.
+    Returns (y, new_cache).
+    """
+    B, Sq, D = x.shape
+    h = block_norm(x, p, norm)
+    src = kv_src if kv_src is not None else h
+
+    q = (h @ p["wq"]).reshape(B, Sq, num_heads, head_dim)
+    if cache is not None and kv_src is not None and not write_cross:
+        # cross-attention with precomputed encoder KV cache
+        k, v = cache["k"], cache["v"]
+        new_cache = cache
+    else:
+        k = (src @ p["wk"]).reshape(B, src.shape[1], num_kv_heads, head_dim)
+        v = (src @ p["wv"]).reshape(B, src.shape[1], num_kv_heads, head_dim)
+        if kv_src is None and positions is not None:
+            if mrope_positions is not None:
+                q = apply_mrope(q, mrope_positions, rope_theta)
+                k = apply_mrope(k, mrope_positions[:, :, :src.shape[1]]
+                                if mrope_positions.shape[-1] != src.shape[1]
+                                else mrope_positions, rope_theta)
+            else:
+                q = apply_rope(q, positions, rope_theta)
+                k = apply_rope(k, positions[:, :src.shape[1]]
+                               if positions.shape[-1] != src.shape[1]
+                               else positions, rope_theta)
+        new_cache = cache
+        if cache is not None and kv_src is None and cache_pos is not None:
+            # prefill/decode: insert this step's K/V at cache_pos
+            k_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), cache_pos, axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), cache_pos, axis=1)
+            new_cache = {"k": k_cache, "v": v_cache}
+            k, v = k_cache, v_cache
+        elif cache is not None:
+            new_cache = {"k": k.astype(cache["k"].dtype),
+                         "v": v.astype(cache["v"].dtype)}
+
+    q = shard_fn(q, role="heads")
+    q_offset = cache_pos if cache_pos is not None else 0
+    o = sdpa(q, k, v, causal=causal and kv_src is None, q_offset=q_offset,
+             impl=attn_impl)
+    o = o.reshape(B, Sq, num_heads * head_dim)
+    y = o @ p["wo"]
+    return x + shard_fn(y, role="boundary"), new_cache

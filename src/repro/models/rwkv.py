@@ -1,0 +1,121 @@
+"""RWKV6 (Finch) blocks: time-mix (WKV attention-free mixer with
+data-dependent decay) and channel-mix (squared-relu FFN with receptance).
+
+The WKV recurrence dispatches to the Pallas chunked-scan kernel
+(kernels/ops.py) or the lax.scan oracle (kernels/ref.py).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import block_norm, dense_init, init_norm
+
+
+def _token_shift(x: jax.Array, prev: Optional[jax.Array]) -> jax.Array:
+    """x_{t-1} stream: shift right by one; `prev` is the carry for decode."""
+    if prev is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([prev[:, None, :], x[:, :-1]], axis=1) \
+        if x.shape[1] > 1 else prev[:, None, :]
+
+
+def init_rwkv_tmix(key, d_model: int, head_size: int, norm: str,
+                   dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    H = d_model // head_size
+    ks = jax.random.split(key, 6)
+    p = {
+        "wr": dense_init(ks[0], d_model, d_model, dtype),
+        "wk": dense_init(ks[1], d_model, d_model, dtype),
+        "wv": dense_init(ks[2], d_model, d_model, dtype),
+        "wg": dense_init(ks[3], d_model, d_model, dtype),
+        "wo": dense_init(ks[4], d_model, d_model, dtype),
+        "decay": jnp.full((d_model,), -4.0, jnp.float32),   # base log-log decay
+        "bonus": (jax.random.normal(ks[5], (H, head_size), jnp.float32)
+                  * 0.1),
+        "mix_r": jnp.full((d_model,), 0.5, dtype),
+        "mix_k": jnp.full((d_model,), 0.5, dtype),
+        "mix_v": jnp.full((d_model,), 0.5, dtype),
+        "mix_g": jnp.full((d_model,), 0.5, dtype),
+        "mix_w": jnp.full((d_model,), 0.5, dtype),
+    }
+    p.update({f"ln_{k}": v for k, v in init_norm(d_model, norm, dtype).items()})
+    return p
+
+
+def apply_rwkv_tmix(x: jax.Array, p: Dict[str, jax.Array], *, head_size: int,
+                    norm: str, state: Optional[Dict[str, jax.Array]] = None,
+                    use_kernel: bool = False,
+                    shard_fn=lambda a, role=None: a):
+    """state (decode): {"shift": (B,D), "wkv": (B,H,hs,hs) fp32}.
+    Returns (y, new_state)."""
+    B, S, D = x.shape
+    H = D // head_size
+    h = block_norm(x, p, norm)
+    prev = state["shift"] if state is not None else None
+    h_prev = _token_shift(h, prev)
+
+    def mix(m):
+        return h * m + h_prev * (1.0 - m)
+
+    r = (mix(p["mix_r"]) @ p["wr"]).reshape(B, S, H, head_size)
+    k = (mix(p["mix_k"]) @ p["wk"]).reshape(B, S, H, head_size)
+    v = (mix(p["mix_v"]) @ p["wv"]).reshape(B, S, H, head_size)
+    g = mix(p["mix_g"]) @ p["wg"]
+    # data-dependent decay in (0, 1): w = exp(-exp(decay + f(x))) per channel
+    w_raw = p["decay"][None, None] + \
+        mix(p["mix_w"]).astype(jnp.float32) * 0.01
+    w = jnp.exp(-jnp.exp(w_raw)).reshape(B, S, H, head_size)
+
+    if state is not None:
+        # decode: single recurrent step against the carried WKV state
+        from repro.kernels import ref
+        out, wkv = ref.rwkv6(r, k, v, w, p["bonus"], state["wkv"])
+    elif use_kernel:
+        from repro.kernels import ops
+        out = ops.rwkv6(r, k, v, w, p["bonus"])
+        wkv = None
+    else:
+        from repro.kernels import ref
+        out, wkv = ref.rwkv6(r, k, v, w, p["bonus"])
+
+    out = out.reshape(B, S, D) * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    y = out @ p["wo"]
+    new_state = None
+    if state is not None:
+        new_state = {"shift": h[:, -1], "wkv": wkv}
+    return x + shard_fn(y, role="boundary"), new_state
+
+
+def init_rwkv_cmix(key, d_model: int, d_ff: int, norm: str,
+                   dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    ks = jax.random.split(key, 3)
+    p = {
+        "wk": dense_init(ks[0], d_model, d_ff, dtype),
+        "wv": dense_init(ks[1], d_ff, d_model, dtype),
+        "wr": dense_init(ks[2], d_model, d_model, dtype),
+        "mix_k": jnp.full((d_model,), 0.5, dtype),
+        "mix_r": jnp.full((d_model,), 0.5, dtype),
+    }
+    p.update({f"ln_{k}": v for k, v in init_norm(d_model, norm, dtype).items()})
+    return p
+
+
+def apply_rwkv_cmix(x: jax.Array, p: Dict[str, jax.Array], *, norm: str,
+                    state: Optional[Dict[str, jax.Array]] = None,
+                    shard_fn=lambda a, role=None: a):
+    """state (decode): {"shift": (B, D)}. Returns (y, new_state)."""
+    B, S, D = x.shape
+    h = block_norm(x, p, norm)
+    prev = state["shift"] if state is not None else None
+    h_prev = _token_shift(h, prev)
+    hk = h * p["mix_k"] + h_prev * (1.0 - p["mix_k"])
+    hr = h * p["mix_r"] + h_prev * (1.0 - p["mix_r"])
+    k = jnp.square(jax.nn.relu((hk @ p["wk"]).astype(jnp.float32))).astype(x.dtype)
+    k = shard_fn(k, role="inner")
+    vv = k @ p["wv"]
+    r = jax.nn.sigmoid((hr @ p["wr"]).astype(jnp.float32)).astype(x.dtype)
+    new_state = {"shift": h[:, -1]} if state is not None else None
+    return x + shard_fn(r * vv, role="boundary"), new_state

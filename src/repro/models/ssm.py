@@ -1,0 +1,113 @@
+"""Mamba-style selective SSM block (jamba's sequence mixer).
+
+Training/prefill uses a parallel associative scan over the time axis
+(h_t = a_t * h_{t-1} + b_t is associative in (a, b)); decode is a single
+recurrent state update. Pure JAX — the scan maps onto lax.associative_scan,
+which XLA lowers to a log-depth tree.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import block_norm, dense_init, init_norm
+
+
+def init_ssm(key, d_model: int, expand: int, d_state: int, d_conv: int,
+             norm: str, dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    di = expand * d_model
+    dtr = max(1, d_model // 16)
+    ks = jax.random.split(key, 6)
+    p = {
+        "in_proj": dense_init(ks[0], d_model, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (di, d_conv), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], di, dtr + 2 * d_state, dtype),
+        "dt_proj": dense_init(ks[3], dtr, di, dtype),
+        "dt_bias": jnp.zeros((di,), dtype),
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32),
+                                  (di, 1))),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], di, d_model, dtype),
+    }
+    p.update({f"ln_{k}": v for k, v in init_norm(d_model, norm, dtype).items()})
+    return p
+
+
+def _ssm_core(x: jax.Array, p: Dict[str, jax.Array], d_state: int,
+              state: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, di). Returns (y (B,S,di), final_state (B,di,ds))."""
+    B, S, di = x.shape
+    dtr = p["dt_proj"].shape[0]
+    xdbc = x @ p["x_proj"]                                  # (B,S,dtr+2ds)
+    dt_in, Bc, Cc = jnp.split(xdbc.astype(jnp.float32),
+                              [dtr, dtr + d_state], axis=-1)
+    dt = jax.nn.softplus(dt_in @ p["dt_proj"].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # (B,S,di)
+    A = -jnp.exp(p["a_log"])                                # (di, ds)
+    a = jnp.exp(dt[..., None] * A[None, None])              # (B,S,di,ds)
+    b = (dt[..., None] * Bc[:, :, None, :]) * x.astype(jnp.float32)[..., None]
+
+    if state is None and S > 1:
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, b1 * a2 + b2
+        a_acc, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    else:
+        h0 = state if state is not None else jnp.zeros((B, di, d_state),
+                                                       jnp.float32)
+        def step(hprev, ab):
+            at, bt = ab
+            hnew = at * hprev + bt
+            return hnew, hnew
+        hT, hs = jax.lax.scan(step, h0,
+                              (jnp.moveaxis(a, 1, 0), jnp.moveaxis(b, 1, 0)))
+        h = jnp.moveaxis(hs, 0, 1)
+    y = jnp.einsum("bsdn,bsn->bsd", h, Cc)                  # (B,S,di)
+    y = y + p["d_skip"][None, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype), h[:, -1]
+
+
+def apply_ssm(x: jax.Array, p: Dict[str, jax.Array], *, d_state: int,
+              d_conv: int, norm: str,
+              state: Optional[Dict[str, jax.Array]] = None,
+              shard_fn=lambda a, role=None: a):
+    """One mamba block with pre-norm + residual.
+
+    state (decode): {"ssm": (B,di,ds) fp32, "conv": (B,d_conv-1,di)}.
+    Returns (y, new_state)."""
+    B, S, D = x.shape
+    h = block_norm(x, p, norm)
+    xz = h @ p["in_proj"]
+    di = xz.shape[-1] // 2
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi = shard_fn(xi, role="inner")
+
+    # causal depthwise conv
+    hist = state["conv"] if state is not None else \
+        jnp.zeros((B, p["conv_w"].shape[1] - 1, di), xi.dtype)
+    xpad = jnp.concatenate([hist, xi], axis=1)
+    new_hist = xpad[:, -(p["conv_w"].shape[1] - 1):]
+    xc = _causal_depthwise_conv(xpad, p["conv_w"], p["conv_b"])[:, -S:]
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+
+    y, ssm_state = _ssm_core(xc, p, d_state,
+                             state["ssm"] if state is not None else None)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = y @ p["out_proj"]
+    new_state = {"ssm": ssm_state, "conv": new_hist}
+    return x + shard_fn(out, role="boundary"), new_state
+
+
+def _causal_depthwise_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x: (B, S+dc-1, di); w: (di, dc) -> (B, S+dc-1, di), valid from dc-1."""
+    dc = w.shape[1]
+    out = jnp.zeros_like(x)
+    for i in range(dc):
+        shifted = jnp.roll(x, dc - 1 - i, axis=1)
+        out = out + shifted * w[:, i][None, None, :]
+    return out + b[None, None, :]

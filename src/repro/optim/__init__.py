@@ -1,0 +1,12 @@
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.compression import (
+    compress_int8,
+    decompress_int8,
+    compressed_psum,
+    topk_sparsify,
+)
+
+__all__ = [
+    "AdamWState", "adamw_init", "adamw_update",
+    "compress_int8", "decompress_int8", "compressed_psum", "topk_sparsify",
+]

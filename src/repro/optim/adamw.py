@@ -1,0 +1,57 @@
+"""Sharded AdamW (pure JAX, no optax).
+
+Optimiser state inherits the parameter shardings (plus ZeRO-1 sharding of the
+fp32 triple over the data-parallel axis when the plan enables it — see
+core/perfmodel.ModelOptions.zero1). bf16 params keep an fp32 master copy.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    master: Any                      # fp32 master params
+    m: Any
+    v: Any
+
+
+def adamw_init(params) -> AdamWState:
+    master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(jnp.zeros((), jnp.int32), master, zeros,
+                      jax.tree.map(jnp.copy, zeros))
+
+
+def adamw_update(params, grads, state: AdamWState, *,
+                 lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+                 eps: float = 1e-8, weight_decay: float = 0.1,
+                 grad_clip: Optional[float] = 1.0):
+    """Returns (new_params, new_state). Params keep their input dtype."""
+    gf = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if grad_clip is not None:
+        gsq = sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(gf))
+        gnorm = jnp.sqrt(gsq)
+        scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-12))
+        gf = jax.tree.map(lambda g: g * scale, gf)
+
+    step = state.step + 1
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    new_m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.m, gf)
+    new_v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.v, gf)
+
+    def upd(p32, m, v):
+        mhat = m / bc1
+        vhat = v / bc2
+        return p32 - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p32)
+
+    new_master = jax.tree.map(upd, state.master, new_m, new_v)
+    new_params = jax.tree.map(lambda p, p32: p32.astype(p.dtype),
+                              params, new_master)
+    return new_params, AdamWState(step, new_master, new_m, new_v)

@@ -1,0 +1,72 @@
+"""Gradient-compression collectives (distributed-optimisation tricks).
+
+Two schemes, both pure JAX so they compose with shard_map/psum:
+
+  int8 quantised all-reduce — 4x traffic cut on the DP gradient ring:
+      q = round(g / scale) with stochastic rounding; psum(q) in int32;
+      dequantise. The SAMO collective model exposes this as
+      ModelOptions.grad_compression = 0.25.
+
+  top-k sparsification — keep the k largest-|g| entries (error feedback left
+      to the caller); traffic ~ 2k/n of dense.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(g: jax.Array, key: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (int8 tensor, fp32 scale). Stochastic rounding when key given."""
+    gf = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    x = gf / scale
+    if key is not None:
+        x = jnp.floor(x + jax.random.uniform(key, x.shape))
+    else:
+        x = jnp.round(x)
+    return jnp.clip(x, -127, 127).astype(jnp.int8), scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array,
+                    dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def compressed_psum(g: jax.Array, axis_name: str,
+                    key: Optional[jax.Array] = None) -> jax.Array:
+    """int8-quantised psum over `axis_name` (call inside shard_map).
+
+    A shared scale (pmax of per-member absmax) makes the int32 psum an exact
+    sum of the quantised values; rings <= 2^24 members cannot overflow.
+    Returns the mean gradient.
+    """
+    gf = g.astype(jnp.float32)
+    local_max = jnp.max(jnp.abs(gf))
+    scale = jnp.maximum(jax.lax.pmax(local_max, axis_name), 1e-12) / 127.0
+    x = gf / scale
+    if key is not None:
+        x = jnp.floor(x + jax.random.uniform(key, x.shape))
+    else:
+        x = jnp.round(x)
+    q = jnp.clip(x, -127, 127).astype(jnp.int32)
+    total = jax.lax.psum(q, axis_name)
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+    return (total.astype(jnp.float32) * scale) / n
+
+
+def topk_sparsify(g: jax.Array, k_fraction: float = 0.01
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (values, flat indices) of the top-|g| k_fraction entries."""
+    flat = g.reshape(-1).astype(jnp.float32)
+    k = max(1, int(flat.shape[0] * k_fraction))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    return flat[idx], idx
+
+
+def topk_densify(values: jax.Array, idx: jax.Array, shape) -> jax.Array:
+    out = jnp.zeros((int(jnp.prod(jnp.array(shape))),), values.dtype)
+    return out.at[idx].set(values).reshape(shape)

@@ -1,0 +1,9 @@
+from repro.runtime.fault_tolerance import (
+    FaultToleranceConfig,
+    HeartbeatMonitor,
+    ResilientRunner,
+)
+from repro.runtime.stragglers import StragglerTracker
+
+__all__ = ["FaultToleranceConfig", "HeartbeatMonitor", "ResilientRunner",
+           "StragglerTracker"]

@@ -1,0 +1,47 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
+see the real single CPU device (the 512-device override belongs exclusively
+to launch/dryrun.py)."""
+import pytest
+
+from repro.configs import ARCHS, get_arch, reduced
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.core.backends import BACKENDS
+from repro.core.graph_builder import build_hdgraph
+from repro.core.objectives import Problem
+from repro.core.platform import Platform
+
+
+TINY_SHAPE = ShapeSpec("train_tiny", 256, 16, "train")
+TINY_DECODE = ShapeSpec("decode_tiny", 256, 16, "decode")
+
+
+@pytest.fixture(scope="session")
+def tiny_arch() -> ArchConfig:
+    return reduced(get_arch("tinyllama-1.1b"))
+
+
+@pytest.fixture(scope="session")
+def small_platform() -> Platform:
+    return Platform(name="test-4x4", mesh_axes=(("data", 4), ("model", 4)),
+                    hbm_bytes=16 * 2**30)
+
+
+@pytest.fixture
+def tiny_problem(tiny_arch, small_platform) -> Problem:
+    graph = build_hdgraph(tiny_arch, TINY_SHAPE)
+    return Problem(graph=graph, platform=small_platform,
+                   backend=BACKENDS["spmd"], objective="latency",
+                   exec_model="spmd")
+
+
+def make_tiny_problem(arch_name="tinyllama-1.1b", shape=TINY_SHAPE,
+                      backend="spmd", objective="latency",
+                      exec_model="spmd", platform=None, **opts):
+    from repro.core.perfmodel import ModelOptions
+    arch = reduced(get_arch(arch_name))
+    platform = platform or Platform(
+        name="test-4x4", mesh_axes=(("data", 4), ("model", 4)))
+    graph = build_hdgraph(arch, shape)
+    return Problem(graph=graph, platform=platform,
+                   backend=BACKENDS[backend], objective=objective,
+                   exec_model=exec_model, opts=ModelOptions(**opts))

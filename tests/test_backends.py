@@ -1,0 +1,109 @@
+"""Backend variable menus, scoped assignment, propagation (Tables I & II)."""
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_arch, reduced
+from repro.core.backends import BACKENDS, MEGATRON, SIMPLE, SPMD
+from repro.core.graph_builder import build_hdgraph
+from repro.core.hdgraph import partitions_from_cuts, resource_minimal
+from repro.core.platform import Platform
+
+from conftest import TINY_SHAPE
+
+PLAT = Platform(name="t", mesh_axes=(("data", 4), ("model", 4)))
+
+
+def _graph(layers=4):
+    arch = reduced(get_arch("tinyllama-1.1b"), num_layers=layers)
+    return build_hdgraph(arch, TINY_SHAPE)
+
+
+def test_candidate_menus_divide_dims():
+    g = _graph()
+    for backend in BACKENDS.values():
+        for i, n in enumerate(g.nodes):
+            for var, dim in (("s_in", n.rows), ("s_out", n.col_div),
+                             ("kern", n.batch)):
+                for c in backend.candidates(g, i, var, PLAT):
+                    assert dim % c == 0, (backend.name, n.name, var, c)
+
+
+def test_simple_backend_pins_channel_folds():
+    g = _graph()
+    for i in range(len(g.nodes)):
+        assert SIMPLE.candidates(g, i, "s_in", PLAT) == [1]
+        assert SIMPLE.candidates(g, i, "s_out", PLAT) == [1]
+        assert len(SIMPLE.candidates(g, i, "kern", PLAT)) > 1
+
+
+def test_megatron_strict_kv():
+    g = _graph()
+    i = next(j for j, n in enumerate(g.nodes) if n.kind == "attn")
+    kv = g.nodes[i].kv_limit
+    cands = MEGATRON.candidates(g, i, "s_out", PLAT)
+    assert all(c <= kv for c in cands)
+
+
+def test_group_scope_is_partition_local():
+    g = _graph(4)
+    attns = [j for j, n in enumerate(g.nodes) if n.kind == "attn"]
+    # no cuts: all attn share the variable
+    assert SPMD.scope(g, attns[0], "s_out", ()) == attns
+    # cut between layer 1 and 2 splits the scope
+    cut = attns[2] - 1
+    scoped = SPMD.scope(g, attns[0], "s_out", (cut,))
+    assert scoped == [a for a in attns if a <= cut]
+
+
+def test_set_fold_applies_to_scope_and_clamps():
+    g = _graph(2)
+    attns = [j for j, n in enumerate(g.nodes) if n.kind == "attn"]
+    v = SPMD.initial(g).with_cuts(())             # one partition: full scope
+    v2 = SPMD.set_fold(g, v, attns[0], "kern", 4)
+    assert all(v2.kern[a] == 4 for a in attns)
+
+
+def test_propagate_harmonises_scan_groups():
+    g = _graph(4)
+    attns = [j for j, n in enumerate(g.nodes) if n.kind == "attn"]
+    v = resource_minimal(g).with_cuts(())
+    v = v.replace_node(attns[1], kern=4)          # raw inconsistent state
+    v = SPMD.propagate(g, v)
+    assert len({v.kern[a] for a in attns}) == 1   # harmonised
+
+
+def test_megatron_propagate_anchors_per_partition():
+    g = _graph(4)
+    v = MEGATRON.initial(g)
+    v = MEGATRON.set_fold(g, v, 1, "kern", 4)
+    # global (per-partition) tying: every node shares k
+    parts = partitions_from_cuts(g, v.cuts)
+    for part in parts:
+        assert len({v.kern[i] for i in part}) == 1
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=60, deadline=None)
+def test_random_move_preserves_legality(seed):
+    g = _graph(2)
+    rng = random.Random(seed)
+    v = SPMD.initial(g)
+    for _ in range(5):
+        v = SPMD.random_move(rng, g, v, PLAT)
+    for i, n in enumerate(g.nodes):
+        assert n.rows % v.s_in[i] == 0
+        assert n.col_div % v.s_out[i] == 0
+        assert n.batch % v.kern[i] == 0
+    for c in v.cuts:
+        assert 0 <= c < len(g.nodes) - 1
+
+
+def test_design_space_ordering():
+    """fpgaConvNet-analogue (spmd) has the largest space; HLS4ML-analogue
+    (simple) the smallest — paper Table IV's qualitative claim."""
+    g = _graph(4)
+    sizes = {name: b.design_space_size(g, PLAT)
+             for name, b in BACKENDS.items()}
+    assert sizes["spmd"] > sizes["megatron"] > sizes["simple"]

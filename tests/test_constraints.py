@@ -1,0 +1,135 @@
+"""Constraint checks (paper Eq. 6-10)."""
+import dataclasses
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_arch, reduced
+from repro.configs.base import ShapeSpec
+from repro.core import constraints as C
+from repro.core.graph_builder import build_hdgraph
+from repro.core.hdgraph import Variables, partitions_from_cuts, resource_minimal
+from repro.core.perfmodel import ModelOptions
+from repro.core.platform import Platform
+
+from conftest import TINY_SHAPE, make_tiny_problem
+
+PLAT = Platform(name="t", mesh_axes=(("data", 4), ("model", 4)))
+
+
+def _graph():
+    arch = reduced(get_arch("tinyllama-1.1b"), num_layers=2)
+    return build_hdgraph(arch, TINY_SHAPE)
+
+
+def test_channel_factor_violations():
+    g = _graph()
+    v = resource_minimal(g)
+    rep = C.ConstraintReport()
+    C.check_channel_factor(g, v, PLAT, rep)
+    assert rep.ok
+    # fold that does not divide the head count (reduced arch: 4 heads)
+    i = next(j for j, n in enumerate(g.nodes) if n.kind == "attn")
+    bad = v.replace_node(i, s_out=3)
+    rep = C.ConstraintReport()
+    C.check_channel_factor(g, bad, PLAT, rep)
+    assert not rep.ok and "s_O=3" in rep.violations[0]
+
+
+def test_mesh_realizability_rejected():
+    g = _graph()
+    v = resource_minimal(g)
+    # (4, 4, 4) = 64 chips needs three disjoint subsets on a 2-axis mesh
+    bad = v.replace_node(0, s_in=4, s_out=4, kern=4)
+    rep = C.ConstraintReport()
+    C.check_channel_factor(g, bad, PLAT, rep)
+    assert any("not mesh-realisable" in m for m in rep.violations)
+
+
+def test_strict_kv_limit():
+    g = _graph()
+    i = next(j for j, n in enumerate(g.nodes) if n.kind == "attn")
+    kv = g.nodes[i].kv_limit
+    v = resource_minimal(g).replace_node(i, s_out=4)
+    rep = C.ConstraintReport()
+    C.check_channel_factor(g, v, PLAT, rep, strict_kv=True)
+    if 4 > kv:
+        assert any("exceeds kv_heads" in m for m in rep.violations)
+    rep2 = C.ConstraintReport()
+    C.check_channel_factor(g, v, PLAT, rep2, strict_kv=False)
+    assert not any("exceeds" in m for m in rep2.violations)
+
+
+def test_intra_matching():
+    g = _graph()
+    i = next(j for j, n in enumerate(g.nodes) if n.elementwise)
+    v = resource_minimal(g).replace_node(i, s_in=4, s_out=1)
+    rep = C.ConstraintReport()
+    C.check_intra_matching(g, v, rep)
+    assert not rep.ok
+
+
+def test_inter_matching_partition_local():
+    g = _graph()
+    n = len(g.nodes)
+    ones = tuple([1] * n)
+    si = list(ones)
+    si[0] = 4                                     # layout break at edge 0
+    v = Variables((), tuple(si), ones, ones)
+    rep = C.ConstraintReport()
+    C.check_inter_matching(g, v, rep)
+    assert not rep.ok
+    # the same mismatch across a cut is allowed (staged through HBM)
+    v_cut = Variables((0,), tuple(si), ones, ones)
+    rep2 = C.ConstraintReport()
+    C.check_inter_matching(g, v_cut, rep2)
+    assert rep2.ok
+
+
+def test_scan_tying_within_partition():
+    prob = make_tiny_problem()
+    g = prob.graph
+    attns = [j for j, n in enumerate(g.nodes) if n.kind == "attn"]
+    v = resource_minimal(g).with_cuts(())         # one partition
+    v = v.replace_node(attns[0], kern=4)
+    rep = C.ConstraintReport()
+    C.check_scan_tying(g, v, rep)
+    assert not rep.ok
+    # split so each attn sits in its own partition -> no tying constraint
+    v2 = v.with_cuts(tuple(range(len(g.nodes) - 1)))
+    rep2 = C.ConstraintReport()
+    C.check_scan_tying(g, v2, rep2)
+    assert rep2.ok
+
+
+def test_resource_constraint_fires_for_tiny_hbm():
+    small = Platform(name="small", mesh_axes=(("data", 4), ("model", 4)),
+                     hbm_bytes=2 * 2**20)         # 2 MiB HBM
+    prob = make_tiny_problem(platform=small)
+    v = resource_minimal(prob.graph)
+    rep = prob.check(v)
+    assert any("HBM residency" in m for m in rep.violations)
+
+
+@given(st.data())
+@settings(max_examples=60, deadline=None)
+def test_check_consistency_random_folds(data):
+    """Any design the backend constructs via set_fold passes channel-factor
+    and matching checks (propagation keeps V legal)."""
+    prob = make_tiny_problem()
+    g, backend, plat = prob.graph, prob.backend, prob.platform
+    v = backend.initial(g)
+    for _ in range(data.draw(st.integers(0, 6))):
+        i = data.draw(st.integers(0, len(g.nodes) - 1))
+        var = data.draw(st.sampled_from(("s_in", "s_out", "kern")))
+        cands = backend.candidates(g, i, var, plat)
+        v = backend.set_fold(g, v, i, var, data.draw(st.sampled_from(cands)))
+    rep = C.ConstraintReport()
+    C.check_channel_factor(g, v, plat, rep)
+    # per-variable menus are divisor-legal; joint realisability may still
+    # fail (that is the optimiser's job to respect) — only divisibility is
+    # guaranteed here.
+    assert not [m for m in rep.violations if "does not divide" in m]
+    rep2 = C.ConstraintReport()
+    C.check_intra_matching(g, v, rep2)
+    assert rep2.ok

@@ -1,0 +1,88 @@
+"""Exporter: optimised HD-Graph -> ShardingPlan (paper §IV-E)."""
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_arch, reduced
+from repro.core.backends import BACKENDS
+from repro.core.exporter import default_plan, export_plan
+from repro.core.graph_builder import build_hdgraph
+from repro.core.hdgraph import resource_minimal
+from repro.core.optimizers import rule_based
+from repro.core.objectives import Problem
+from repro.core.platform import Platform
+
+from conftest import TINY_SHAPE
+
+PLAT = Platform(name="t", mesh_axes=(("data", 4), ("model", 4)))
+
+
+def _plan(arch_name="tinyllama-1.1b", layers=2):
+    arch = reduced(get_arch(arch_name), num_layers=layers)
+    graph = build_hdgraph(arch, TINY_SHAPE)
+    prob = Problem(graph=graph, platform=PLAT, backend=BACKENDS["spmd"],
+                   objective="latency", exec_model="spmd")
+    res = rule_based(prob, time_budget_s=15)
+    return export_plan(graph, res.variables, PLAT, "spmd", res.evaluation)
+
+
+def test_axes_disjoint_within_kind():
+    plan = _plan()
+    for part in plan.partitions:
+        for kp in part.kinds.values():
+            used = list(kp.rows_axes) + list(kp.cols_axes) + list(kp.batch_axes)
+            assert len(used) == len(set(used)), kp
+
+
+def test_axes_exist_on_mesh():
+    plan = _plan()
+    names = set(PLAT.axis_names)
+    for part in plan.partitions:
+        for kp in part.kinds.values():
+            for ax in (*kp.rows_axes, *kp.cols_axes, *kp.batch_axes):
+                assert ax in names
+
+
+def test_partition_layer_cover():
+    plan = _plan(layers=4)
+    lo = min(p.layer_start for p in plan.partitions if p.layer_end)
+    hi = max(p.layer_end for p in plan.partitions)
+    assert (lo, hi) == (0, 4)
+    assert any(p.has_embed for p in plan.partitions)
+    assert any(p.has_head for p in plan.partitions)
+
+
+def test_spec_roles():
+    plan = _plan()
+    spec = plan.spec_for_role("col", 3, "ffn", 0, stacked=1)
+    assert isinstance(spec, P) and len(spec) == 3
+    assert spec[0] is None                        # stacked scan dim unsharded
+    rep = plan.spec_for_role("replicate", 2, "norm", 0)
+    assert all(e is None for e in rep)
+
+
+def test_kv_cache_spec_heads_clamped():
+    """GQA: cache heads axis sharded only when s_out <= kv heads."""
+    arch = reduced(get_arch("tinyllama-1.1b"))   # kv=2 < heads=4
+    graph = build_hdgraph(arch, TINY_SHAPE)
+    prob = Problem(graph=graph, platform=PLAT, backend=BACKENDS["spmd"],
+                   objective="latency", exec_model="spmd")
+    res = rule_based(prob, time_budget_s=10)
+    plan = export_plan(graph, res.variables, PLAT, "spmd")
+    spec = plan.kv_cache_spec(0)
+    assert isinstance(spec, P) and len(spec) == 4
+
+
+def test_default_plan_pure_dp():
+    arch = reduced(get_arch("tinyllama-1.1b"))
+    graph = build_hdgraph(arch, TINY_SHAPE)
+    plan = default_plan(graph, PLAT)
+    assert len(plan.partitions) == 1
+    kp = plan.kind_plan("ffn", 0)
+    assert kp.s_out == 1 and kp.s_in == 1 and kp.kern > 1
+
+
+def test_moe_expert_axes():
+    plan = _plan("granite-moe-1b-a400m", layers=2)
+    part = next(p for p in plan.partitions if "moe" in p.kinds)
+    spec = plan.spec_for_role("expert", 4, "moe", part.index, stacked=1)
+    assert len(spec) == 4

@@ -1,0 +1,121 @@
+"""HD-Graph structure + partitioning (paper Eq. 1) properties."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_arch, reduced
+from repro.configs.base import ShapeSpec
+from repro.core.graph_builder import build_hdgraph
+from repro.core.hdgraph import (
+    HDGraph,
+    Variables,
+    boundary_bytes,
+    partitions_from_cuts,
+    resource_minimal,
+)
+
+from conftest import TINY_SHAPE
+
+
+def _graph(n_layers=4):
+    arch = reduced(get_arch("tinyllama-1.1b"), num_layers=n_layers)
+    return build_hdgraph(arch, TINY_SHAPE)
+
+
+def test_graph_structure():
+    g = _graph(4)
+    # embed + 4 x (attn, ffn) + final_norm + head
+    assert len(g) == 1 + 8 + 2
+    assert g.nodes[0].kind == "embed"
+    assert g.nodes[-1].kind == "head"
+    kinds = [n.kind for n in g.nodes[1:-2]]
+    assert kinds == ["attn", "ffn"] * 4
+    assert g.edges == [(i, i + 1) for i in range(len(g) - 1)]
+
+
+@given(cuts=st.sets(st.integers(0, 9), max_size=9))
+@settings(max_examples=200, deadline=None)
+def test_partitions_disjoint_complete(cuts):
+    """Eq. 1: any legal cut set yields disjoint, complete, ordered parts."""
+    g = _graph(4)          # 11 nodes -> edges 0..9
+    parts = partitions_from_cuts(g, sorted(cuts))
+    flat = [i for p in parts for i in p]
+    assert flat == list(range(len(g)))            # complete + ordered
+    assert len(set(flat)) == len(flat)            # disjoint
+    assert len(parts) == len(cuts) + 1            # |P| = |C| + 1
+
+
+def test_partitions_cut_bounds():
+    g = _graph(2)
+    with pytest.raises(ValueError):
+        partitions_from_cuts(g, [len(g.nodes) - 1])
+    with pytest.raises(ValueError):
+        partitions_from_cuts(g, [-1])
+
+
+def test_resource_minimal_fully_split():
+    g = _graph(3)
+    v = resource_minimal(g)
+    assert v.s_in == v.s_out == v.kern == tuple([1] * len(g))
+    # fully split at every ALLOWED (layer-boundary) edge:
+    assert v.cuts == g.cut_edges
+    assert v.num_partitions == len(g.cut_edges) + 1
+
+
+def test_cut_edges_are_layer_boundaries():
+    g = _graph(3)
+    for e in g.cut_edges:
+        a, b = g.nodes[e], g.nodes[e + 1]
+        assert a.layer != b.layer or a.kind == "embed"
+    # no cut between a layer's mixer and its ffn
+    attn_idx = [i for i, n in enumerate(g.nodes) if n.kind == "attn"]
+    for i in attn_idx:
+        assert i not in g.cut_edges
+
+
+def test_variables_replace_and_cuts():
+    g = _graph(2)
+    v = resource_minimal(g)
+    v2 = v.replace_node(1, s_out=4)
+    assert v2.s_out[1] == 4 and v.s_out[1] == 1   # immutability
+    v3 = v2.with_cuts([3, 1, 1])
+    assert v3.cuts == (1, 3)
+
+
+def test_boundary_bytes_positive():
+    g = _graph(2)
+    parts = partitions_from_cuts(g, [0, 2])
+    bb = boundary_bytes(g, parts)
+    assert len(bb) == 3
+    assert all(d_in > 0 and d_out > 0 for d_in, d_out in bb)
+
+
+def test_moe_and_hybrid_graphs():
+    kimi = reduced(get_arch("kimi-k2-1t-a32b"))
+    g = build_hdgraph(kimi, TINY_SHAPE)
+    kinds = [n.kind for n in g.nodes]
+    assert "moe" in kinds
+    assert kinds[2] == "ffn"                      # first layer dense
+    jamba = reduced(get_arch("jamba-1.5-large-398b"))
+    gj = build_hdgraph(jamba, TINY_SHAPE)
+    jk = [n.kind for n in gj.nodes]
+    assert "ssm" in jk and "attn" in jk and "moe" in jk
+    assert jk.count("attn") * 7 == jk.count("ssm")   # 1:7 interleave
+
+
+def test_decode_graph_marks_internal_rows():
+    arch = reduced(get_arch("tinyllama-1.1b"))
+    g = build_hdgraph(arch, ShapeSpec("d", 256, 16, "decode"))
+    attn = [n for n in g.nodes if n.kind == "attn"]
+    assert all(n.internal_rows for n in attn)     # split-KV folding dim
+    assert all(n.rows == 256 for n in attn)       # rows = cache length
+    ffn = [n for n in g.nodes if n.kind == "ffn"]
+    assert all(not n.internal_rows for n in ffn)
+
+
+def test_train_flops_factor_of_inference():
+    arch = reduced(get_arch("tinyllama-1.1b"))
+    gt = build_hdgraph(arch, ShapeSpec("t", 256, 16, "train"))
+    gp = build_hdgraph(arch, ShapeSpec("p", 256, 16, "prefill"))
+    ffn_t = next(n for n in gt.nodes if n.kind == "ffn")
+    ffn_p = next(n for n in gp.nodes if n.kind == "ffn")
+    assert ffn_t.flops == pytest.approx(3.0 * ffn_p.flops)

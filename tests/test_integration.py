@@ -1,0 +1,61 @@
+"""End-to-end integration: SAMO -> plan -> jitted steps on the host mesh;
+train with checkpoint/restart equivalence; serve greedy decode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.launch.serve import serve
+from repro.launch.train import train
+
+TINY = dict(num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+            d_ff=128, vocab_size=256)
+
+
+def _arch(name="tinyllama-1.1b", **kw):
+    merged = dict(TINY)
+    merged.update(kw)
+    return reduced(get_arch(name), **merged)
+
+
+def test_train_loop_runs_and_learns(tmp_path):
+    res = train(_arch(), steps=12, seq_len=64, global_batch=4,
+                ckpt_dir=str(tmp_path), ckpt_interval=5, lr=1e-3,
+                log=lambda *a: None)
+    assert res.steps_run == 12
+    assert np.isfinite(res.final_loss)
+    # loss trend over the synthetic stream
+    assert np.mean(res.losses[-4:]) < np.mean(res.losses[:4])
+
+
+def test_checkpoint_restart_equivalence(tmp_path):
+    """kill-and-resume == uninterrupted run (same data, same weights)."""
+    d1, d2 = str(tmp_path / "a"), str(tmp_path / "b")
+    full = train(_arch(), steps=10, seq_len=32, global_batch=4,
+                 ckpt_dir=d1, ckpt_interval=5, log=lambda *a: None)
+    # interrupted: run 5 steps (checkpoint), then resume to 10
+    train(_arch(), steps=5, seq_len=32, global_batch=4,
+          ckpt_dir=d2, ckpt_interval=5, log=lambda *a: None)
+    resumed = train(_arch(), steps=10, seq_len=32, global_batch=4,
+                    ckpt_dir=d2, ckpt_interval=5, log=lambda *a: None)
+    assert resumed.steps_run == 5                  # resumed from step 5
+    np.testing.assert_allclose(full.losses[-1], resumed.losses[-1],
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", ["tinyllama-1.1b", "rwkv6-1.6b",
+                                  "granite-moe-1b-a400m"])
+def test_serve_generates(name):
+    tokens, stats = serve(_arch(name), prompt_len=8, gen_len=6, batch=2,
+                          log=lambda *a: None)
+    assert tokens.shape == (2, 6)
+    assert stats["decode_tok_per_s"] > 0
+    assert (tokens >= 0).all()
+
+
+def test_serve_whisper_encdec():
+    arch = _arch("whisper-small", num_frames=8)
+    tokens, stats = serve(arch, prompt_len=8, gen_len=4, batch=2,
+                          log=lambda *a: None)
+    assert tokens.shape == (2, 4)

@@ -1,0 +1,136 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode,
+plus hypothesis property tests for the chunked XLA path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+# ----------------------------------------------------------------------
+# flash attention (Pallas, interpret=True on CPU)
+# ----------------------------------------------------------------------
+
+FLASH_SHAPES = [
+    # (B, Sq, Skv, H, Hkv, dh)
+    (1, 128, 128, 4, 4, 64),       # MHA, single block
+    (2, 256, 256, 8, 2, 64),       # GQA 4:1, multi-block
+    (1, 64, 64, 4, 1, 128),        # MQA, wide head
+    (2, 37, 37, 4, 2, 64),         # ragged: padding on both axes
+    (1, 16, 512, 2, 2, 64),        # cross-attn-like (Skv >> Sq)
+]
+
+
+@pytest.mark.parametrize("shape", FLASH_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_matches_oracle(shape, dtype, causal):
+    B, Sq, Skv, H, Hkv, dh = shape
+    if causal and Sq != Skv:
+        pytest.skip("causal requires square q/kv here")
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, dh), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, Skv, Hkv, dh), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, Skv, Hkv, dh), jnp.float32).astype(dtype)
+    got = ops.flash_attention(q, k, v, causal=causal, interpret=True)
+    want = ref.attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want.astype(jnp.float32),
+        atol=_tol(dtype), rtol=_tol(dtype))
+
+
+def test_flash_attention_block_sizes():
+    B, S, H, dh = 1, 256, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, S, H, dh))
+    k = jax.random.normal(ks[1], (B, S, H, dh))
+    v = jax.random.normal(ks[2], (B, S, H, dh))
+    want = ref.attention(q, k, v, causal=True)
+    for bq, bk in [(64, 64), (128, 256), (256, 128)]:
+        got = ops.flash_attention(q, k, v, causal=True, block_q=bq,
+                                  block_k=bk, interpret=True)
+        np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+# ----------------------------------------------------------------------
+# RWKV6 chunked WKV scan (Pallas)
+# ----------------------------------------------------------------------
+
+WKV_SHAPES = [(1, 128, 2, 32), (2, 256, 4, 64), (1, 100, 2, 64),
+              (1, 64, 1, 128)]
+
+
+@pytest.mark.parametrize("shape", WKV_SHAPES)
+@pytest.mark.parametrize("chunk", [32, 128])
+def test_rwkv6_kernel_matches_oracle(shape, chunk):
+    B, T, H, hs = shape
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    r, k, v = (jax.random.normal(ks[i], (B, T, H, hs)) * 0.5
+               for i in range(3))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, hs))) * 0.4 + 0.55
+    u = jax.random.normal(ks[4], (H, hs)) * 0.1
+    got = ops.rwkv6(r, k, v, w, u, chunk=chunk, interpret=True)
+    want, _ = ref.rwkv6(r, k, v, w, u)
+    np.testing.assert_allclose(got, want, atol=5e-4, rtol=5e-4)
+
+
+def test_rwkv6_state_carry_decode():
+    """Oracle recurrence with carried state == full-sequence run."""
+    B, T, H, hs = 1, 32, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    r, k, v = (jax.random.normal(ks[i], (B, T, H, hs)) * 0.5
+               for i in range(3))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, hs))) * 0.4 + 0.55
+    u = jax.random.normal(ks[4], (H, hs)) * 0.1
+    full, _ = ref.rwkv6(r, k, v, w, u)
+    half, state = ref.rwkv6(r[:, :16], k[:, :16], v[:, :16], w[:, :16], u)
+    rest, _ = ref.rwkv6(r[:, 16:], k[:, 16:], v[:, 16:], w[:, 16:], u, state)
+    np.testing.assert_allclose(
+        jnp.concatenate([half, rest], axis=1), full, atol=1e-5, rtol=1e-5)
+
+
+# ----------------------------------------------------------------------
+# chunked attention (pure-jnp flash; the dry-run's XLA path)
+# ----------------------------------------------------------------------
+
+@given(
+    b=st.integers(1, 2), sq=st.integers(1, 65), skv=st.integers(1, 130),
+    h=st.sampled_from([1, 2, 4]), group=st.sampled_from([1, 2]),
+    dh=st.sampled_from([8, 32]), causal=st.booleans(),
+    block=st.sampled_from([16, 64]),
+)
+@settings(max_examples=40, deadline=None)
+def test_chunked_attention_property(b, sq, skv, h, group, dh, causal, block):
+    if causal and sq > skv:
+        skv = sq
+    hkv = max(h // group, 1)
+    h = hkv * group
+    ks = jax.random.split(jax.random.PRNGKey(b * 1000 + sq), 3)
+    q = jax.random.normal(ks[0], (b, sq, h, dh))
+    k = jax.random.normal(ks[1], (b, skv, hkv, dh))
+    v = jax.random.normal(ks[2], (b, skv, hkv, dh))
+    off = skv - sq if causal else 0
+    got = ref.attention_chunked(q, k, v, causal=causal, q_offset=off,
+                                block_k=block)
+    want = ref.attention(q, k, v, causal=causal, q_offset=off)
+    np.testing.assert_allclose(got, want, atol=3e-5, rtol=3e-5)
+
+
+def test_flash_decode_fallback():
+    """Dynamic q_offset (decode) falls back to the oracle path."""
+    B, S, H, dh = 1, 1, 2, 64
+    L = 64
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = jax.random.normal(ks[0], (B, S, H, dh))
+    k = jax.random.normal(ks[1], (B, L, H, dh))
+    v = jax.random.normal(ks[2], (B, L, H, dh))
+    got = ops.flash_attention(q, k, v, causal=True,
+                              q_offset=jnp.int32(10))
+    want = ref.attention(q, k, v, causal=True, q_offset=jnp.int32(10))
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-5)

@@ -1,0 +1,167 @@
+"""Per-architecture smoke tests (reduced configs, CPU): forward shapes,
+finiteness, one train step, decode/prefill consistency. The FULL configs are
+exercised only by the dry-run (ShapeDtypeStruct, no allocation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_arch, reduced
+from repro.models.model import Model, build_segments
+from repro.optim.adamw import adamw_init, adamw_update
+
+ALL_ARCHS = sorted(ARCHS)
+
+
+def _batch(arch, B=2, S=16, key=0):
+    ks = jax.random.split(jax.random.PRNGKey(key), 3)
+    batch = {
+        "tokens": jax.random.randint(ks[0], (B, S), 0, arch.vocab_size),
+        "labels": jax.random.randint(ks[1], (B, S), 0, arch.vocab_size),
+    }
+    if arch.frontend == "audio_stub":
+        F = arch.num_frames or 16
+        batch["frames"] = jax.random.normal(
+            ks[2], (B, F, arch.d_model)).astype(jnp.bfloat16)
+    if arch.mrope:
+        pos = jnp.arange(S, dtype=jnp.int32)[None].repeat(B, 0)
+        batch["mrope_positions"] = jnp.stack([pos, pos, pos])
+    return batch
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_forward_shapes_and_finite(name):
+    arch = reduced(get_arch(name))
+    model = Model(arch)
+    params = model.init_params(jax.random.PRNGKey(0))
+    batch = _batch(arch)
+    logits, _ = model.forward(params, batch)
+    assert logits.shape == (2, 16, arch.vocab_size)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_one_train_step_no_nans(name):
+    arch = reduced(get_arch(name))
+    model = Model(arch)
+    params = model.init_params(jax.random.PRNGKey(0))
+    batch = _batch(arch)
+    loss, grads = jax.value_and_grad(model.loss)(params, batch)
+    assert bool(jnp.isfinite(loss))
+    new_params, _ = adamw_update(params, grads, adamw_init(params))
+    flat = jax.tree.leaves(new_params)
+    assert all(bool(jnp.isfinite(x.astype(jnp.float32)).all()) for x in flat)
+    loss2 = model.loss(new_params, batch)
+    assert bool(jnp.isfinite(loss2))
+
+
+@pytest.mark.parametrize("name", ["tinyllama-1.1b", "rwkv6-1.6b",
+                                  "jamba-1.5-large-398b", "whisper-small",
+                                  "kimi-k2-1t-a32b", "qwen2-vl-72b"])
+def test_decode_matches_full_forward(name):
+    """Prefill-into-cache then full forward agree at the last position, and
+    one decode step runs against the cache."""
+    arch = reduced(get_arch(name))
+    model = Model(arch)
+    params = model.init_params(jax.random.PRNGKey(0))
+    B, S = 2, 8
+    batch = _batch(arch, B=B, S=S, key=1)
+    full_logits, _ = model.forward(params, batch)
+    cache = model.init_cache(B, S + 1)
+    pre_logits, cache = model.forward(params, batch, cache=cache,
+                                      cache_pos=jnp.int32(0))
+    np.testing.assert_allclose(
+        full_logits.astype(jnp.float32)[:, -1],
+        pre_logits.astype(jnp.float32)[:, -1], atol=1e-2, rtol=1e-2)
+    step = {"tokens": batch["tokens"][:, -1:]}
+    if arch.mrope:
+        p = jnp.full((1, B, 1), S, jnp.int32)
+        step["mrope_positions"] = jnp.concatenate([p, p, p], 0)
+    dec_logits, _ = model.forward(params, step, cache=cache,
+                                  cache_pos=jnp.int32(S))
+    assert dec_logits.shape == (B, 1, arch.vocab_size)
+    assert bool(jnp.isfinite(dec_logits.astype(jnp.float32)).all())
+
+
+def test_attn_impls_agree():
+    arch = reduced(get_arch("tinyllama-1.1b"))
+    params = Model(arch).init_params(jax.random.PRNGKey(0))
+    batch = _batch(arch)
+    outs = {}
+    for impl in ("ref", "chunked", "flash"):
+        logits, _ = Model(arch, attn_impl=impl).forward(params, batch)
+        outs[impl] = logits.astype(jnp.float32)
+    # bf16 end-to-end: block-order reassociation drifts a few ulp per layer
+    np.testing.assert_allclose(outs["ref"], outs["chunked"],
+                               atol=6e-2, rtol=6e-2)
+    np.testing.assert_allclose(outs["ref"], outs["flash"],
+                               atol=6e-2, rtol=6e-2)
+
+
+def test_layer_range_partitions_compose():
+    """Running partition models back-to-back == the whole model (the
+    weight-streaming execution contract)."""
+    arch = reduced(get_arch("tinyllama-1.1b"), num_layers=4)
+    whole = Model(arch)
+    params = whole.init_params(jax.random.PRNGKey(0))
+    batch = _batch(arch)
+
+    m1 = Model(arch, layer_range=(0, 2), include_embed=True,
+               include_head=False)
+    m2 = Model(arch, layer_range=(2, 4), include_embed=False,
+               include_head=True)
+    # split the stacked decoder params by layer range (tree-wise slice)
+    seg = params["dec0"]
+    p1 = {"embed": params["embed"],
+          "dec0": jax.tree.map(lambda a: a[:2], seg)}
+    p2 = {"dec2": jax.tree.map(lambda a: a[2:], seg),
+          "final_norm": params["final_norm"], "head": params["head"]}
+    h, _ = m1.forward(p1, batch)
+    logits2, _ = m2.forward(p2, {"tokens": None}, embedded=h)
+    logits_full, _ = whole.forward(params, batch)
+    np.testing.assert_allclose(logits2.astype(jnp.float32),
+                               logits_full.astype(jnp.float32),
+                               atol=2e-2, rtol=2e-2)
+
+
+def test_segments_match_arch_patterns():
+    jamba = reduced(get_arch("jamba-1.5-large-398b"))
+    segs = build_segments(jamba)
+    assert sum(s.count * len(set(s.layer_of)) for s in segs if not s.encoder)
+    whisper = reduced(get_arch("whisper-small"))
+    segs_w = build_segments(whisper)
+    assert any(s.encoder for s in segs_w)
+    assert any("cross_attn" in s.pattern for s in segs_w if not s.encoder)
+
+
+def test_param_count_matches_model():
+    for name in ("tinyllama-1.1b", "granite-moe-1b-a400m", "rwkv6-1.6b"):
+        arch = reduced(get_arch(name))
+        model = Model(arch)
+        params = model.init_params(jax.random.PRNGKey(0))
+        actual = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+        predicted = arch.param_count()
+        assert abs(actual - predicted) / max(actual, 1) < 0.15, \
+            (name, actual, predicted)
+
+
+def test_loss_decreases_tiny_training():
+    arch = reduced(get_arch("tinyllama-1.1b"), num_layers=2, d_model=64,
+                   d_ff=128, vocab_size=128)
+    model = Model(arch)
+    params = model.init_params(jax.random.PRNGKey(0))
+    state = adamw_init(params)
+
+    @jax.jit
+    def step(params, state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        params, state = adamw_update(params, grads, state, lr=3e-3)
+        return params, state, loss
+
+    # one fixed batch: optimiser must overfit it
+    batch = _batch(arch, B=4, S=32)
+    losses = []
+    for _ in range(20):
+        params, state, loss = step(params, state, batch)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.8, losses[:3] + losses[-3:]

@@ -1,0 +1,123 @@
+"""Roofline performance/resource models (paper Eq. 2-7)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_arch, reduced
+from repro.configs.base import ShapeSpec
+from repro.core.graph_builder import build_hdgraph
+from repro.core.hdgraph import resource_minimal
+from repro.core.perfmodel import (
+    ModelOptions,
+    eval_nodes,
+    node_eval,
+    partition_time,
+    t_conf,
+)
+from repro.core.platform import Platform
+
+from conftest import TINY_SHAPE
+
+PLAT = Platform(name="t", mesh_axes=(("data", 4), ("model", 4)))
+
+
+def _ffn_node():
+    arch = reduced(get_arch("tinyllama-1.1b"), num_layers=1)
+    g = build_hdgraph(arch, TINY_SHAPE)
+    return g, next(n for n in g.nodes if n.kind == "ffn")
+
+
+def test_node_time_is_roofline_max():
+    g, n = _ffn_node()
+    e = node_eval(n, 1, 1, 1, PLAT, "train")
+    assert e.time == max(e.compute_s, e.memory_s, e.collective_s)
+    assert e.bottleneck in ("compute", "memory", "collective")
+
+
+def test_compute_scales_with_chips():
+    g, n = _ffn_node()
+    e1 = node_eval(n, 1, 1, 1, PLAT, "train")
+    e4 = node_eval(n, 4, 1, 1, PLAT, "train")
+    e16 = node_eval(n, 4, 4, 1, PLAT, "train")
+    assert e4.compute_s == pytest.approx(e1.compute_s / 4)
+    assert e16.compute_s == pytest.approx(e1.compute_s / 16)
+
+
+def test_tp_collective_appears_only_when_sharded():
+    g, n = _ffn_node()
+    assert node_eval(n, 1, 1, 4, PLAT, "train").collective_bytes > 0  # DP grads
+    e = node_eval(n, 1, 1, 1, PLAT, "train")
+    assert e.collective_bytes == 0.0
+    assert node_eval(n, 1, 4, 1, PLAT, "train").collective_bytes > 0  # TP
+
+
+def test_seq_parallel_attention_pays_kv_ring():
+    arch = reduced(get_arch("tinyllama-1.1b"), num_layers=1)
+    g = build_hdgraph(arch, TINY_SHAPE)
+    attn = next(n for n in g.nodes if n.kind == "attn")
+    e = node_eval(attn, 4, 1, 1, PLAT, "train")
+    assert e.collective_bytes > 0                 # ring KV exchange
+    e1 = node_eval(attn, 1, 1, 1, PLAT, "train")
+    assert e1.collective_bytes == 0.0
+
+
+def test_train_residency_options_reduce_memory():
+    g, n = _ffn_node()
+    base = node_eval(n, 1, 1, 4, PLAT, "train")
+    zero1 = node_eval(n, 1, 1, 4, PLAT, "train", ModelOptions(zero1=True))
+    assert zero1.hbm_resident < base.hbm_resident
+    sp = node_eval(n, 1, 4, 4, PLAT, "train",
+                   ModelOptions(seq_parallel_stash=True))
+    nosp = node_eval(n, 1, 4, 4, PLAT, "train")
+    assert sp.hbm_resident < nosp.hbm_resident
+
+
+def test_grad_compression_reduces_collective():
+    g, n = _ffn_node()
+    full = node_eval(n, 1, 1, 4, PLAT, "train")
+    comp = node_eval(n, 1, 1, 4, PLAT, "train",
+                     ModelOptions(grad_compression=0.25))
+    assert comp.collective_bytes < full.collective_bytes
+
+
+def test_partition_time_semantics():
+    arch = reduced(get_arch("tinyllama-1.1b"), num_layers=2)
+    g = build_hdgraph(arch, TINY_SHAPE)
+    v = resource_minimal(g)
+    evals = eval_nodes(g, v, PLAT)
+    part = list(range(len(g.nodes)))
+    t_stream = partition_time(g, part, evals, "streaming")
+    t_spmd = partition_time(g, part, evals, "spmd")
+    assert t_stream == max(e.time for e in evals)          # Eq. 2
+    assert t_spmd == pytest.approx(sum(e.time for e in evals))
+    assert t_spmd >= t_stream
+
+
+def test_t_conf_fixed_plus_stream():
+    arch = reduced(get_arch("tinyllama-1.1b"), num_layers=1)
+    g = build_hdgraph(arch, TINY_SHAPE)
+    v = resource_minimal(g)
+    tc = t_conf(g, [1], v, PLAT)
+    assert tc > PLAT.reconf_fixed_s
+    # sharding the weights 4-way shrinks the streaming part
+    v2 = v.replace_node(1, s_out=4)
+    assert t_conf(g, [1], v2, PLAT) < tc
+
+
+def test_decode_state_bytes_present():
+    arch = reduced(get_arch("tinyllama-1.1b"), num_layers=1)
+    g = build_hdgraph(arch, ShapeSpec("d", 256, 16, "decode"))
+    attn = next(n for n in g.nodes if n.kind == "attn")
+    assert attn.state_bytes > 0
+    e = node_eval(attn, 1, 1, 1, PLAT, "decode")
+    assert e.hbm_resident > attn.weight_bytes     # cache is resident
+
+
+@given(si=st.sampled_from([1, 2, 4]), so=st.sampled_from([1, 2, 4]),
+       k=st.sampled_from([1, 2, 4]))
+@settings(max_examples=40, deadline=None)
+def test_eval_nonnegative_and_finite(si, so, k):
+    g, n = _ffn_node()
+    for mode in ("train", "prefill", "decode"):
+        e = node_eval(n, si, so, k, PLAT, mode)
+        for x in (e.compute_s, e.memory_s, e.collective_s, e.hbm_resident):
+            assert x >= 0.0 and x == x            # finite, non-negative

@@ -1,0 +1,94 @@
+"""Fault-tolerance policy + straggler mitigation (simulated clock)."""
+import pytest
+
+from repro.runtime.fault_tolerance import (
+    FaultToleranceConfig,
+    HeartbeatMonitor,
+    ResilientRunner,
+)
+from repro.runtime.stragglers import StragglerTracker
+from repro.checkpoint.elastic import shrink_batch_for_mesh
+
+
+class Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _runner(spare=0, allow_elastic=True, max_restarts=5):
+    clock = Clock()
+    cfg = FaultToleranceConfig(heartbeat_interval_s=10, miss_limit=3,
+                               allow_elastic=allow_elastic,
+                               max_restarts=max_restarts)
+    mon = HeartbeatMonitor(["h0", "h1", "h2", "h3"], cfg, clock=clock)
+    return ResilientRunner(cfg, mon, checkpoint_mgr=None,
+                           spare_hosts=spare, clock=clock), mon, clock
+
+
+def test_no_failure_no_action():
+    runner, mon, clock = _runner()
+    clock.t = 25                      # under the 30 s miss window
+    assert runner.handle_failures() is None
+
+
+def test_restart_with_spare():
+    runner, mon, clock = _runner(spare=1)
+    clock.t = 31
+    mon.beat("h1"); mon.beat("h2"); mon.beat("h3")
+    assert runner.handle_failures() == "restart"
+    assert runner.spare_hosts == 0
+
+
+def test_elastic_shrink_without_spare():
+    runner, mon, clock = _runner(spare=0)
+    clock.t = 31
+    mon.beat("h1"); mon.beat("h2"); mon.beat("h3")
+    assert runner.handle_failures() == "shrink"
+    assert "h0" not in mon.last_seen
+
+
+def test_abort_without_elastic():
+    runner, mon, clock = _runner(spare=0, allow_elastic=False)
+    clock.t = 31
+    mon.beat("h1"); mon.beat("h2"); mon.beat("h3")
+    assert runner.handle_failures() == "abort"
+
+
+def test_crash_loop_guard():
+    runner, mon, clock = _runner(spare=0, max_restarts=2)
+    for i in range(3):
+        clock.t += 31
+        for h in list(mon.last_seen):
+            if h != "h1":
+                mon.beat(h)
+        action = runner.handle_failures()
+        mon.last_seen.setdefault("h1", clock.t - 100)  # keep failing
+    assert action == "abort"
+
+
+def test_straggler_flags_slow_host():
+    t = StragglerTracker(window=10, deadline_factor=2.0, patience=2)
+    for _ in range(6):
+        t.record("fast", 1.0)
+    t.record("slow", 5.0)
+    t.record("slow", 5.0)
+    assert "slow" in t.stragglers()
+    assert "fast" not in t.stragglers()
+    assert t.deadline_s() == pytest.approx(2.0)
+
+
+def test_straggler_recovers():
+    t = StragglerTracker(patience=2, deadline_factor=2.0)
+    for _ in range(6):
+        t.record("a", 1.0)
+    t.record("b", 5.0)
+    t.record("b", 1.0)                # back to normal resets strikes
+    assert t.stragglers() == []
+
+
+def test_elastic_batch_shrink():
+    assert shrink_batch_for_mesh(256, old_dp=16, new_dp=15) == 240
+    assert shrink_batch_for_mesh(256, old_dp=16, new_dp=16) == 256

@@ -1,0 +1,68 @@
+"""steps.py: plan-driven shardings are structurally valid on the host mesh."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_arch, reduced
+from repro.configs.base import ShapeSpec
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import opt_state_specs, zero1_specs
+from repro.launch.train import plan_for_mesh
+from repro.models.model import Model
+
+
+def _setup():
+    arch = reduced(get_arch("tinyllama-1.1b"), num_layers=2)
+    mesh = make_host_mesh()
+    shape = ShapeSpec("t", 64, 4, "train")
+    plan = plan_for_mesh(arch, shape, mesh, time_budget_s=5)
+    return arch, mesh, plan
+
+
+def test_param_specs_cover_tree():
+    arch, mesh, plan = _setup()
+    model = Model(arch)
+    shapes = model.param_shapes()
+    specs = model.param_specs(plan)
+    flat_shapes = jax.tree.leaves(shapes)
+    flat_specs = jax.tree.leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_shapes) == len(flat_specs)
+    for sds, spec in zip(flat_shapes, flat_specs):
+        assert len(spec) <= len(sds.shape)
+
+
+def test_zero1_specs_divide():
+    arch, mesh, plan = _setup()
+    model = Model(arch)
+    shapes = model.param_shapes()
+    specs = model.param_specs(plan)
+    z = zero1_specs(shapes, specs, mesh, dp_axes=("data",))
+    dp = mesh.shape["data"]
+    for sds, spec in zip(jax.tree.leaves(shapes),
+                         jax.tree.leaves(z, is_leaf=lambda x:
+                                         isinstance(x, P))):
+        for d, entry in enumerate(spec):
+            if entry == "data":
+                assert sds.shape[d] % dp == 0
+
+
+def test_opt_state_specs_structure():
+    arch, mesh, plan = _setup()
+    model = Model(arch)
+    shapes = model.param_shapes()
+    specs = model.param_specs(plan)
+    o = opt_state_specs(shapes, specs, mesh, zero1=True)
+    assert isinstance(o.step, P) and len(o.step) == 0
+    assert jax.tree.structure(
+        o.master, is_leaf=lambda x: isinstance(x, P)) == \
+        jax.tree.structure(specs, is_leaf=lambda x: isinstance(x, P))
+
+
+def test_cache_specs_structure():
+    arch, mesh, plan = _setup()
+    model = Model(arch)
+    cshapes = model.cache_shapes(4, 64)
+    cspecs = model.cache_specs(plan)
+    assert set(cshapes) == set(cspecs)
