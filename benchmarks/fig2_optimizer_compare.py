@@ -17,6 +17,7 @@ from benchmarks.common import Reporter, make_problem, zoo_arch
 
 SEEDS = 8                        # paper used 50; CPU budget says fewer
 SA_ITERS = 800
+PT_CHAINS = 8                    # parallel-tempering ladder width
 
 
 def run(reporter=None) -> Reporter:
@@ -37,6 +38,15 @@ def run(reporter=None) -> Reporter:
             sa_times.append(time.perf_counter() - t0)
             sa_objs.append(sa.evaluation.latency)
 
+        # parallel tempering: SA_ITERS sweeps on each of PT_CHAINS lockstep
+        # chains — one batched evaluate per sweep makes the 8x evaluation
+        # budget cheaper than a single scalar seed run
+        t0 = time.perf_counter()
+        pt = simulated_annealing(make_problem(arch, backend="megatron"),
+                                 seed=0, max_iters=SA_ITERS * PT_CHAINS,
+                                 chains=PT_CHAINS)
+        pt_s = time.perf_counter() - t0
+
         matched = sum(1 for o in sa_objs
                       if o <= rb.evaluation.latency * 1.02)
         rep.add(
@@ -48,6 +58,8 @@ def run(reporter=None) -> Reporter:
             sa_std_ms=f"{statistics.pstdev(sa_objs)*1e3:.2f}",
             sa_matched_rb=f"{matched}/{SEEDS}",
             sa_seconds=f"{statistics.mean(sa_times):.1f}",
+            pt_best_ms=f"{pt.evaluation.latency*1e3:.2f}",
+            pt_seconds=f"{pt_s:.1f}",
         )
     rep.print_table("Fig. 2 — SA (seeded runs) vs Rule-Based, latency obj.")
     rep.save()

@@ -1,7 +1,9 @@
 """Benchmark harness: one module per paper table/figure + the roofline
-report. ``python -m benchmarks.run [names...]``"""
+report, plus a ``tests`` lane running the tier-1 suite with per-test
+timings. ``python -m benchmarks.run [names...]``"""
 from __future__ import annotations
 
+import subprocess
 import sys
 import time
 
@@ -14,6 +16,13 @@ from benchmarks import (
     table6_vs_baseline,
 )
 
+def run_tests():
+    """Test lane: the tier-1 suite with the 10 slowest tests reported."""
+    return subprocess.run(
+        [sys.executable, "-m", "pytest", "-x", "-q", "--durations=10"],
+        check=False).returncode
+
+
 ALL = {
     "table4": table4_design_space.run,
     "fig2": fig2_optimizer_compare.run,
@@ -21,18 +30,22 @@ ALL = {
     "table6": table6_vs_baseline.run,
     "fig4": fig4_batch_partitions.run,
     "roofline": roofline.run,
+    "tests": run_tests,
 }
 
 
 def main(argv=None) -> int:
-    names = (argv or sys.argv[1:]) or list(ALL)
+    # the tests lane runs only when asked for explicitly
+    names = (argv or sys.argv[1:]) or [n for n in ALL if n != "tests"]
     for name in names:
         if name not in ALL:
             print(f"unknown benchmark {name!r}; known: {sorted(ALL)}")
             return 1
         t0 = time.time()
-        ALL[name]()
+        ret = ALL[name]()
         print(f"[{name}] done in {time.time()-t0:.1f}s", flush=True)
+        if isinstance(ret, int) and ret != 0:
+            return ret                    # tests lane: propagate pytest's rc
     return 0
 
 

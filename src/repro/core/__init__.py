@@ -15,6 +15,7 @@ from repro.core.hdgraph import (
 from repro.core.graph_builder import build_hdgraph
 from repro.core.perfmodel import ModelOptions, NodeEval, eval_nodes, node_eval
 from repro.core.objectives import Evaluation, Problem
+from repro.core.batched_eval import BatchedEvaluator, BatchResult
 from repro.core.backends import BACKENDS, MEGATRON, SIMPLE, SPMD, Backend
 from repro.core.optimizers import (
     OPTIMIZERS,
@@ -30,7 +31,7 @@ __all__ = [
     "HDGraph", "Node", "Variables", "partitions_from_cuts", "resource_minimal",
     "build_hdgraph",
     "ModelOptions", "NodeEval", "eval_nodes", "node_eval",
-    "Evaluation", "Problem",
+    "Evaluation", "Problem", "BatchedEvaluator", "BatchResult",
     "BACKENDS", "MEGATRON", "SIMPLE", "SPMD", "Backend",
     "OPTIMIZERS", "OptimResult", "brute_force", "repair", "rule_based",
     "simulated_annealing",

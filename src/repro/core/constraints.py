@@ -34,6 +34,28 @@ class ConstraintReport:
         self.violations.append(msg)
 
 
+def check_all(graph: HDGraph, v: Variables, platform: Platform,
+              evals: List[NodeEval], exec_model: str, backend,
+              rep: ConstraintReport) -> ConstraintReport:
+    """Run the backend's full constraint chain (Eq. 6-10) into ``rep``.
+
+    Single source of truth for which checks a backend enables — shared by
+    ``Problem.check``/``Problem.evaluate`` and mirrored (as boolean masks) by
+    ``core/batched_eval.py``.
+    """
+    check_channel_factor(graph, v, platform, rep,
+                         strict_kv=backend.strict_kv)
+    if backend.intra_matching:
+        check_intra_matching(graph, v, rep)
+    if backend.inter_matching:
+        check_inter_matching(graph, v, rep)
+    if backend.scan_tying:
+        check_scan_tying(graph, v, rep)
+    check_resource(graph, v, platform, evals, exec_model, rep)
+    check_bandwidth(graph, v, platform, evals, exec_model, rep)
+    return rep
+
+
 def check_channel_factor(graph: HDGraph, v: Variables, platform: Platform,
                          rep: ConstraintReport, strict_kv: bool = False) -> None:
     """Eq. 8 + TPU mesh-realisability + layer-aligned cuts."""

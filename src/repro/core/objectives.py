@@ -60,18 +60,8 @@ class Problem:
         cached = self._cache.get(("check", v))
         if cached is not None:
             return cached
-        rep = C.ConstraintReport()
-        evals = self._eval_nodes(v)
-        C.check_channel_factor(self.graph, v, self.platform, rep,
-                               strict_kv=self.backend.strict_kv)
-        if self.backend.intra_matching:
-            C.check_intra_matching(self.graph, v, rep)
-        if self.backend.inter_matching:
-            C.check_inter_matching(self.graph, v, rep)
-        if self.backend.scan_tying:
-            C.check_scan_tying(self.graph, v, rep)
-        C.check_resource(self.graph, v, self.platform, evals, self.exec_model, rep)
-        C.check_bandwidth(self.graph, v, self.platform, evals, self.exec_model, rep)
+        rep = C.check_all(self.graph, v, self.platform, self._eval_nodes(v),
+                          self.exec_model, self.backend, C.ConstraintReport())
         if len(self._cache) < self._cache_cap:
             self._cache[("check", v)] = rep
         return rep
@@ -98,17 +88,8 @@ class Problem:
             return cached
         self._eval_count += 1
         evals = self._eval_nodes(v)
-        rep = C.ConstraintReport()
-        C.check_channel_factor(self.graph, v, self.platform, rep,
-                               strict_kv=self.backend.strict_kv)
-        if self.backend.intra_matching:
-            C.check_intra_matching(self.graph, v, rep)
-        if self.backend.inter_matching:
-            C.check_inter_matching(self.graph, v, rep)
-        if self.backend.scan_tying:
-            C.check_scan_tying(self.graph, v, rep)
-        C.check_resource(self.graph, v, self.platform, evals, self.exec_model, rep)
-        C.check_bandwidth(self.graph, v, self.platform, evals, self.exec_model, rep)
+        rep = C.check_all(self.graph, v, self.platform, evals,
+                          self.exec_model, self.backend, C.ConstraintReport())
 
         parts = partitions_from_cuts(self.graph, v.cuts)
         p_times = []
@@ -167,6 +148,35 @@ class Problem:
                 full = na.batch * rows * na.fm_width * 2.0
                 t += full / self.platform.ici_bw
         return t
+
+    # ------------------------------------------------------------------
+    # batched evaluation (core/batched_eval.py)
+    # ------------------------------------------------------------------
+    def batched(self):
+        """The cached vectorised evaluator for this problem instance.
+
+        Lowers the graph/platform into flat arrays on first use; subsequent
+        calls reuse the lowering. Returns a
+        ``repro.core.batched_eval.BatchedEvaluator``.
+        """
+        be = self._cache.get("__batched__")
+        if be is None:
+            from repro.core.batched_eval import BatchedEvaluator
+            be = BatchedEvaluator.from_problem(self)
+            self._cache["__batched__"] = be
+        return be
+
+    def evaluate_many(self, designs) -> "BatchResult":
+        """Batched evaluate of a sequence of ``Variables`` (one array
+        program; counts towards the Table-IV points/s accounting)."""
+        be = self.batched()
+        res = be.evaluate_batch(*be.pack(list(designs)))
+        self.note_batch_evals(len(res))
+        return res
+
+    def note_batch_evals(self, n: int) -> None:
+        """Account ``n`` batched design-point evaluations (Table IV)."""
+        self._eval_count += n
 
     @property
     def evals_done(self) -> int:

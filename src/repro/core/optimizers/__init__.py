@@ -1,4 +1,4 @@
-from repro.core.optimizers.common import OptimResult, repair
+from repro.core.optimizers.common import OptimResult, incumbent_better, repair
 from repro.core.optimizers.brute_force import optimise as brute_force
 from repro.core.optimizers.annealing import optimise as simulated_annealing
 from repro.core.optimizers.rule_based import optimise as rule_based
@@ -9,5 +9,5 @@ OPTIMIZERS = {
     "rule_based": rule_based,
 }
 
-__all__ = ["OptimResult", "repair", "brute_force", "simulated_annealing",
-           "rule_based", "OPTIMIZERS"]
+__all__ = ["OptimResult", "repair", "incumbent_better", "brute_force",
+           "simulated_annealing", "rule_based", "OPTIMIZERS"]

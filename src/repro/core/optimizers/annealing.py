@@ -6,16 +6,32 @@ function psi (Eq. 11): psi = exp(min(0, (O(V_prev) - O(V)) / K)) compared
 against x ~ U(0,1). K decays geometrically by the cooling rate until K_min,
 then (per the paper's evaluation setup) keeps running at K_min for any
 remaining time budget.
+
+Two modes:
+  chains=1 (default) — the paper's single-chain algorithm, bit-identical to
+      the original scalar implementation for a fixed seed (same rng stream,
+      same accept decisions, same history), except that a feasible
+      evaluation now always replaces an infeasible incumbent (bugfix: the
+      repaired initial state can be infeasible, and the old code then never
+      surrendered it to a feasible-but-higher-objective design).
+  chains=K>1 — parallel tempering: K chains on a geometric temperature
+      ladder stepped in lockstep, ONE batched evaluate per sweep
+      (core/batched_eval.py), with periodic Metropolis replica exchanges
+      between adjacent temperatures. Deterministic under a fixed seed.
 """
 from __future__ import annotations
 
 import math
 import random
 import time
-from typing import Optional
+from typing import List, Optional
 
+from repro.core.hdgraph import Variables
 from repro.core.objectives import Problem
-from repro.core.optimizers.common import OptimResult, repair
+from repro.core.optimizers.common import OptimResult, incumbent_better, repair
+
+#: temperature ratio between adjacent parallel-tempering chains
+LADDER_SPREAD = 1.6
 
 
 def optimise(problem: Problem,
@@ -25,7 +41,28 @@ def optimise(problem: Problem,
              cooling: float = 0.98,
              time_budget_s: Optional[float] = None,
              max_iters: Optional[int] = None,
-             objective_scale: Optional[float] = None) -> OptimResult:
+             objective_scale: Optional[float] = None,
+             chains: int = 1,
+             swap_interval: int = 16) -> OptimResult:
+    if chains <= 1:
+        return _optimise_single(problem, seed, k_start, k_min, cooling,
+                                time_budget_s, max_iters, objective_scale)
+    return _optimise_tempering(problem, seed, k_start, k_min, cooling,
+                               time_budget_s, max_iters, objective_scale,
+                               chains, swap_interval)
+
+
+def _scale_for(ev, objective_scale: Optional[float]) -> float:
+    # Normalise temperature to the objective magnitude so the paper's
+    # (K_start=1000, K_min=1) schedule behaves identically across objectives
+    # whose absolute scales differ by orders of magnitude.
+    if objective_scale is not None:
+        return objective_scale
+    return max(abs(ev.objective), 1e-12) / 1000.0
+
+
+def _optimise_single(problem, seed, k_start, k_min, cooling, time_budget_s,
+                     max_iters, objective_scale) -> OptimResult:
     rng = random.Random(seed)
     graph, backend, platform = problem.graph, problem.backend, problem.platform
 
@@ -33,13 +70,7 @@ def optimise(problem: Problem,
     ev = problem.evaluate(v)
     best_v, best_ev = v, ev
     history = [(0, ev.objective)]
-
-    # Normalise temperature to the objective magnitude so the paper's
-    # (K_start=1000, K_min=1) schedule behaves identically across objectives
-    # whose absolute scales differ by orders of magnitude.
-    scale = objective_scale
-    if scale is None:
-        scale = max(abs(ev.objective), 1e-12) / 1000.0
+    scale = _scale_for(ev, objective_scale)
 
     K = k_start
     it = 0
@@ -54,6 +85,12 @@ def optimise(problem: Problem,
             delta = (ev_prev.objective - ev.objective) / scale
             psi = math.exp(min(0.0, delta / K))
             accept = psi >= rng.random()
+        if ev.feasible and not best_ev.feasible:
+            # any feasible evaluation (even a rejected one) beats an
+            # infeasible incumbent — the optimiser must never return an
+            # infeasible design when a feasible point was visited
+            best_v, best_ev = v, ev
+            history.append((it, ev.objective))
         if not accept:
             v, ev = v_prev, ev_prev             # reject new design
         elif ev.objective < best_ev.objective:
@@ -74,3 +111,80 @@ def optimise(problem: Problem,
 
     elapsed = time.perf_counter() - start
     return OptimResult(best_v, best_ev, it, elapsed, history, name="annealing")
+
+
+# ----------------------------------------------------------------------
+# parallel tempering (chains=K): one batched evaluate per sweep
+# ----------------------------------------------------------------------
+
+def _optimise_tempering(problem, seed, k_start, k_min, cooling,
+                        time_budget_s, max_iters, objective_scale,
+                        chains, swap_interval) -> OptimResult:
+    graph, backend, platform = problem.graph, problem.backend, problem.platform
+    rngs = [random.Random(seed * 1_000_003 + c) for c in range(chains)]
+    swap_rng = random.Random(seed * 1_000_003 + 999_983)
+
+    v0 = repair(problem, backend.initial(graph))
+    ev0 = problem.evaluate(v0)
+    vs: List[Variables] = [v0] * chains
+    objs = [ev0.objective] * chains
+    best_v, best_obj, best_feas = v0, ev0.objective, ev0.feasible
+    history = [(0, ev0.objective)]
+    scale = _scale_for(ev0, objective_scale)
+
+    # geometric ladder: chain 0 runs the paper's schedule, higher chains run
+    # hotter replicas of it; all cool in lockstep with floor k_min.
+    temps = [k_start * (LADDER_SPREAD ** c) for c in range(chains)]
+    bev = problem.batched()
+
+    it = 0                       # design points evaluated (all chains)
+    sweep = 0
+    start = time.perf_counter()
+    stop = False
+    while not stop:
+        sweep += 1
+        props = [backend.random_move(rngs[c], graph, vs[c], platform)
+                 for c in range(chains)]
+        res = bev.evaluate_batch(*bev.pack(props))
+        problem.note_batch_evals(chains)
+        it += chains
+        for c in range(chains):
+            c_feas = bool(res.feasible[c])
+            c_obj = float(res.objective[c])
+            if c_feas:
+                delta = (objs[c] - c_obj) / scale
+                psi = math.exp(min(0.0, delta / temps[c]))
+                if psi >= rngs[c].random():
+                    vs[c], objs[c] = props[c], c_obj
+            if incumbent_better(c_feas, c_obj, best_feas, best_obj):
+                best_v, best_obj, best_feas = props[c], c_obj, c_feas
+                history.append((it, c_obj))
+
+        if swap_interval and sweep % swap_interval == 0:
+            for c in range(chains - 1):
+                # Metropolis replica exchange between adjacent temperatures:
+                # accept with min(1, exp((1/T_c - 1/T_c+1)(E_c - E_c+1)/scale))
+                d = (1.0 / temps[c] - 1.0 / temps[c + 1]) \
+                    * (objs[c] - objs[c + 1]) / scale
+                if d >= 0 or math.exp(d) >= swap_rng.random():
+                    vs[c], vs[c + 1] = vs[c + 1], vs[c]
+                    objs[c], objs[c + 1] = objs[c + 1], objs[c]
+
+        cold = temps[0]
+        if cold > k_min:
+            temps = [max(k_min, t * cooling) for t in temps]
+            if temps[0] == k_min and time_budget_s is None \
+                    and max_iters is None:
+                stop = True
+        elif time_budget_s is None and max_iters is None:
+            stop = True
+        if max_iters is not None and it >= max_iters:
+            stop = True
+        if time_budget_s is not None and \
+                time.perf_counter() - start > time_budget_s:
+            stop = True
+
+    elapsed = time.perf_counter() - start
+    best_eval = problem.evaluate(best_v)
+    return OptimResult(best_v, best_eval, it, elapsed, history,
+                       name=f"annealing-pt{chains}")

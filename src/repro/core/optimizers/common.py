@@ -23,6 +23,19 @@ class OptimResult:
         return self.points / self.seconds if self.seconds > 0 else float("inf")
 
 
+def incumbent_better(cand_feasible: bool, cand_objective: float,
+                     best_feasible: bool, best_objective: float) -> bool:
+    """Feasibility-aware incumbent rule: a feasible candidate always beats an
+    infeasible incumbent; among equally-feasible designs, lower O(V) wins.
+    (An optimiser must never return an infeasible design when a feasible
+    point was evaluated.)"""
+    if cand_feasible and not best_feasible:
+        return True
+    if cand_feasible != best_feasible:
+        return False
+    return cand_objective < best_objective
+
+
 def repair(problem: Problem, v: Variables, max_steps: int = 1024) -> Variables:
     """Greedy feasibility repair.
 

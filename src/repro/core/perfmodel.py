@@ -190,10 +190,13 @@ def _collective_bytes(node: Node, s_in: int, s_out: int, kern: int,
     #   decode     — split-KV partial-softmax combine (tiny, flash-decode).
     if s_in > 1:
         if node.internal_rows:
-            # decode split-KV: combine (out, m, l) per q row over the s_in group
+            # decode split-KV: combine (out, m, l) per q row over the s_in
+            # group. Heads shard only up to the KV-head cap (GQA): beyond
+            # kv_limit the partials replicate, so the combine traffic divides
+            # by kv_div, not s_out.
             kv_div = min(s_out, node.kv_limit) if node.kv_limit else max(s_out, 1)
             dh = node.fm_width / max(node.cols, 1)
-            total += (node.batch / kern) * node.cols / max(s_out, 1) \
+            total += (node.batch / kern) * node.cols / max(kv_div, 1) \
                 * (dh + 2.0) * 4.0 * (s_in - 1) / s_in
         elif node.kv_bytes:
             kv_div = (min(s_out, node.kv_limit) if node.kv_limit

@@ -24,7 +24,13 @@ def make_problem(arch: ArchConfig, shape: ShapeSpec,
                  backend: str = "spmd",
                  objective: str = "throughput",
                  exec_model: str = "streaming",
-                 opts: Optional[ModelOptions] = None) -> Problem:
+                 opts: Optional[ModelOptions] = None,
+                 **model_opts) -> Problem:
+    """``model_opts`` are ModelOptions fields (zero1=True, ...) used when no
+    explicit ``opts`` is given."""
+    if opts is not None and model_opts:
+        raise TypeError(f"pass either opts= or ModelOptions fields "
+                        f"{sorted(model_opts)}, not both")
     graph = build_hdgraph(arch, shape)
     return Problem(
         graph=graph,
@@ -32,7 +38,7 @@ def make_problem(arch: ArchConfig, shape: ShapeSpec,
         backend=BACKENDS[backend],
         objective=objective,
         exec_model=exec_model,
-        opts=opts or ModelOptions(),
+        opts=opts or ModelOptions(**model_opts),
     )
 
 

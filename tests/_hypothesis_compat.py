@@ -1,0 +1,156 @@
+"""Offline fallback for the ``hypothesis`` subset this suite uses.
+
+The real ``hypothesis`` cannot be installed in a network-less environment,
+which used to break COLLECTION of 6 test modules. This shim re-exports the
+real library when it is importable and otherwise provides a minimal,
+deterministic property-test runner covering exactly the API the suite needs:
+
+    from _hypothesis_compat import given, settings, strategies as st
+    @given(x=st.integers(0, 10), flag=st.booleans())
+    @settings(max_examples=40, deadline=None)
+    def test_foo(x, flag): ...
+
+Supported strategies: ``integers``, ``sampled_from``, ``booleans``,
+``lists``, ``sets``, ``composite``, ``data`` (with ``data.draw``).
+Sampling is seeded from the test's qualified name + example index (crc32),
+so runs are deterministic across processes and machines — no example
+database, no shrinking (the failing example is reported verbatim instead).
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import random as _random
+    import zlib
+
+    _DEFAULT_MAX_EXAMPLES = 100
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def sample(self, rng: _random.Random):
+            return self._sample(rng)
+
+        def map(self, fn):
+            return _Strategy(lambda rng: fn(self._sample(rng)))
+
+        def filter(self, pred, max_tries: int = 1000):
+            def sample(rng):
+                for _ in range(max_tries):
+                    x = self._sample(rng)
+                    if pred(x):
+                        return x
+                raise ValueError("filter predicate never satisfied")
+            return _Strategy(sample)
+
+    class _DataObject:
+        """st.data() handle: imperative draws inside the test body."""
+
+        def __init__(self, rng: _random.Random):
+            self._rng = rng
+
+        def draw(self, strategy, label=None):
+            return strategy.sample(self._rng)
+
+    class _strategies:
+        @staticmethod
+        def integers(min_value=0, max_value=2 ** 31 - 1):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def sample(rng):
+                size = rng.randint(min_size, max_size)
+                return [elements.sample(rng) for _ in range(size)]
+            return _Strategy(sample)
+
+        @staticmethod
+        def sets(elements, min_size=0, max_size=10):
+            def sample(rng):
+                size = rng.randint(min_size, max_size)
+                out = set()
+                for _ in range(20 * (max_size or 1) + 20):
+                    if len(out) >= size:
+                        break
+                    out.add(elements.sample(rng))
+                return out
+            return _Strategy(sample)
+
+        @staticmethod
+        def composite(fn):
+            def builder(*args, **kwargs):
+                def sample(rng):
+                    return fn(_DataObject(rng).draw, *args, **kwargs)
+                return _Strategy(sample)
+            return builder
+
+        @staticmethod
+        def data():
+            s = _Strategy(lambda rng: _DataObject(rng))
+            s.is_data = True
+            return s
+
+    strategies = _strategies
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+        def deco(fn):
+            fn._compat_settings = {"max_examples": max_examples}
+            return fn
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        def deco(fn):
+            params = [p for p in inspect.signature(fn).parameters]
+            mapping = dict(kw_strategies)
+            free = [p for p in params if p not in mapping]
+            if len(arg_strategies) > len(free):
+                raise TypeError("too many positional strategies for "
+                                f"{fn.__name__}")
+            # hypothesis maps positional strategies onto the RIGHTMOST params
+            for name, strat in zip(free[len(free) - len(arg_strategies):],
+                                   arg_strategies):
+                mapping[name] = strat
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(fn, "_compat_settings",
+                            {}).get("max_examples", _DEFAULT_MAX_EXAMPLES)
+                base = zlib.crc32(
+                    f"{fn.__module__}.{fn.__qualname__}".encode())
+                for i in range(n):
+                    rng = _random.Random(base + i)
+                    drawn = {name: strat.sample(rng)
+                             for name, strat in mapping.items()}
+                    try:
+                        fn(*args, **kwargs, **drawn)
+                    except Exception as e:
+                        shown = {k: v for k, v in drawn.items()
+                                 if not isinstance(v, _DataObject)}
+                        raise AssertionError(
+                            f"falsifying example ({i + 1}/{n}): "
+                            f"{fn.__name__}({shown})") from e
+
+            # strip the consumed params so pytest does not treat the
+            # strategy arguments as missing fixtures
+            remaining = [p for p in params if p not in mapping]
+            wrapper.__signature__ = inspect.Signature(
+                [inspect.Parameter(p, inspect.Parameter.POSITIONAL_OR_KEYWORD)
+                 for p in remaining])
+            return wrapper
+        return deco

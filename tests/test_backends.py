@@ -2,7 +2,7 @@
 import random
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.configs import get_arch, reduced
 from repro.core.backends import BACKENDS, MEGATRON, SIMPLE, SPMD

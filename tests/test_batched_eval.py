@@ -1,0 +1,190 @@
+"""Batched design-space evaluation engine (core/batched_eval.py).
+
+The scalar perfmodel/objectives path is the reference implementation; the
+batched array program must agree with it within 1e-9 on objective,
+feasibility, partition times and Eq. 6 residency — across every example
+architecture, mode, backend and objective, over randomly sampled fold/cut
+designs. Also covers batched brute-force == scalar brute-force and
+multi-chain annealing determinism.
+"""
+import random
+
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_arch, reduced
+from repro.configs.base import ShapeSpec
+from repro.core.backends import BACKENDS
+from repro.core.graph_builder import build_hdgraph
+from repro.core.hdgraph import Variables
+from repro.core.objectives import Problem
+from repro.core.optimizers import brute_force, simulated_annealing
+from repro.core.perfmodel import ModelOptions
+from repro.core.platform import Platform
+
+PLAT = Platform(name="t-4x4", mesh_axes=(("data", 4), ("model", 4)))
+
+TRAIN = ShapeSpec("train_tiny", 256, 16, "train")
+PREFILL = ShapeSpec("prefill_tiny", 256, 16, "prefill")
+DECODE = ShapeSpec("decode_tiny", 256, 16, "decode")
+
+# every example architecture family in the zoo, reduced to test size
+EXAMPLE_ARCHS = sorted(ARCHS)
+
+
+def _problem(arch_name, shape, backend="spmd", objective="latency",
+             exec_model="streaming", platform=PLAT, **opts) -> Problem:
+    arch = reduced(get_arch(arch_name))
+    graph = build_hdgraph(arch, shape)
+    return Problem(graph=graph, platform=platform,
+                   backend=BACKENDS[backend], objective=objective,
+                   exec_model=exec_model, opts=ModelOptions(**opts))
+
+
+def _random_designs(prob: Problem, n: int, seed: int = 0):
+    """Designs from the backend's own move kernel (exercises cuts + folds)."""
+    rng = random.Random(seed)
+    g, be, plat = prob.graph, prob.backend, prob.platform
+    v = be.initial(g)
+    out = []
+    for _ in range(n):
+        v = be.random_move(rng, g, v, plat)
+        out.append(v)
+    return out
+
+
+def _assert_match(prob: Problem, designs):
+    res = prob.evaluate_many(designs)
+    for r, v in enumerate(designs):
+        ev = prob.evaluate(v)
+        assert ev.feasible == bool(res.feasible[r]), \
+            f"feasibility mismatch at {r}: {ev.violations}"
+        assert ev.objective == pytest.approx(res.objective[r],
+                                             rel=1e-9, abs=1e-15)
+        assert ev.latency == pytest.approx(res.latency[r],
+                                           rel=1e-9, abs=1e-15)
+        np.testing.assert_allclose(
+            ev.partition_times,
+            res.part_times[r][:int(res.nparts[r])], rtol=1e-9, atol=1e-15)
+        np.testing.assert_allclose(
+            [e.hbm_resident for e in ev.node_evals],
+            res.node_resident[r], rtol=1e-9)
+
+
+@pytest.mark.parametrize("arch_name", EXAMPLE_ARCHS)
+def test_batched_matches_scalar_all_example_archs(arch_name):
+    """Property: batched == scalar over random designs for every example
+    config, in its most general setting (spmd backend, streaming)."""
+    prob = _problem(arch_name, TRAIN, backend="spmd",
+                    objective="throughput", exec_model="streaming")
+    _assert_match(prob, _random_designs(prob, 40, seed=1))
+
+
+@pytest.mark.parametrize("backend", sorted(BACKENDS))
+@pytest.mark.parametrize("shape", [TRAIN, PREFILL, DECODE],
+                         ids=lambda s: s.mode)
+def test_batched_matches_scalar_modes_and_backends(backend, shape):
+    for objective in ("latency", "throughput"):
+        for exec_model in ("streaming", "spmd"):
+            prob = _problem("tinyllama-1.1b", shape, backend=backend,
+                            objective=objective, exec_model=exec_model)
+            _assert_match(prob, _random_designs(prob, 25, seed=2))
+
+
+def test_batched_matches_scalar_model_options():
+    """ZeRO-1, gradient compression, collective overlap and Megatron-SP
+    stash all flow through the lowering."""
+    prob = _problem("tinyllama-1.1b", TRAIN, backend="spmd",
+                    zero1=True, grad_compression=0.25,
+                    overlap_collectives=0.5, seq_parallel_stash=True)
+    _assert_match(prob, _random_designs(prob, 25, seed=3))
+
+
+def test_batched_matches_scalar_moe_and_rwkv():
+    """MoE (ep_alltoall) and recurrent (carry_bytes) collectives."""
+    for name in ("granite-moe-1b-a400m", "rwkv6-1.6b"):
+        for shape in (TRAIN, DECODE):
+            prob = _problem(name, shape, backend="spmd",
+                            objective="throughput")
+            _assert_match(prob, _random_designs(prob, 25, seed=4))
+
+
+def test_batched_flags_illegal_cut():
+    """A cut off the layer boundary is infeasible in both paths."""
+    prob = _problem("tinyllama-1.1b", TRAIN)
+    g = prob.graph
+    illegal = next(e for e in range(len(g.nodes) - 1)
+                   if e not in g.cut_edges)
+    v = prob.backend.initial(g).with_cuts((illegal,))
+    res = prob.evaluate_many([v])
+    assert not res.feasible[0]
+    assert not prob.evaluate(v).feasible
+
+
+def test_pack_unpack_roundtrip():
+    prob = _problem("tinyllama-1.1b", TRAIN)
+    designs = _random_designs(prob, 10, seed=5)
+    be = prob.batched()
+    si, so, kk, cb = be.pack(designs)
+    for r, v in enumerate(designs):
+        assert be.unpack_row(si, so, kk, cb, r) == v
+
+
+def test_batched_eval_counts_points():
+    prob = _problem("tinyllama-1.1b", TRAIN)
+    designs = _random_designs(prob, 17, seed=6)
+    before = prob.evals_done
+    prob.evaluate_many(designs)
+    assert prob.evals_done == before + 17
+
+
+# ----------------------------------------------------------------------
+# optimisers on top of the batched engine
+# ----------------------------------------------------------------------
+
+def test_brute_force_batched_equals_scalar_engine():
+    """The chunked batched enumeration visits the identical design set and
+    returns the identical optimum (same Variables) as the scalar engine."""
+    for backend in ("simple", "megatron"):
+        for include_cuts in (False, True):
+            a = brute_force(_problem("tinyllama-1.1b", TRAIN,
+                                     backend=backend),
+                            include_cuts=include_cuts, engine="scalar")
+            b = brute_force(_problem("tinyllama-1.1b", TRAIN,
+                                     backend=backend),
+                            include_cuts=include_cuts, engine="batched",
+                            batch_size=256)
+            assert a.points == b.points
+            assert a.variables == b.variables
+            assert a.evaluation.objective == pytest.approx(
+                b.evaluation.objective, rel=1e-9)
+
+
+def test_brute_force_batched_respects_max_points():
+    res = brute_force(_problem("tinyllama-1.1b", TRAIN, backend="spmd"),
+                      max_points=100, engine="batched", batch_size=64)
+    assert res.points == 100
+
+
+def test_multichain_annealing_deterministic_and_feasible():
+    """chains=K parallel tempering: fixed seed => identical design; result
+    is feasible; different seeds explore."""
+    kw = dict(max_iters=400, chains=6)
+    r1 = simulated_annealing(_problem("tinyllama-1.1b", TRAIN), seed=7, **kw)
+    r2 = simulated_annealing(_problem("tinyllama-1.1b", TRAIN), seed=7, **kw)
+    r3 = simulated_annealing(_problem("tinyllama-1.1b", TRAIN), seed=8, **kw)
+    assert r1.variables == r2.variables
+    assert r1.history == r2.history
+    assert r1.evaluation.feasible and r3.evaluation.feasible
+    assert r1.points >= 400                      # K evals per sweep
+
+
+def test_single_chain_annealing_unchanged_by_chains_param():
+    """chains=1 routes to the scalar path: same seed, same design as a
+    plain call (the pre-refactor contract)."""
+    a = simulated_annealing(_problem("tinyllama-1.1b", TRAIN), seed=3,
+                            max_iters=300)
+    b = simulated_annealing(_problem("tinyllama-1.1b", TRAIN), seed=3,
+                            max_iters=300, chains=1)
+    assert a.variables == b.variables
+    assert a.history == b.history

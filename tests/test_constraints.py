@@ -2,7 +2,7 @@
 import dataclasses
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.configs import get_arch, reduced
 from repro.configs.base import ShapeSpec

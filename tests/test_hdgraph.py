@@ -1,6 +1,6 @@
 """HD-Graph structure + partitioning (paper Eq. 1) properties."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.configs import get_arch, reduced
 from repro.configs.base import ShapeSpec

@@ -12,6 +12,10 @@ from repro.launch.train import train
 TINY = dict(num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
             d_ff=128, vocab_size=256)
 
+# every test here drives a full jitted train/serve loop (>3 s each);
+# `pytest -m "not slow"` skips the module for the fast inner loop
+pytestmark = pytest.mark.slow
+
 
 def _arch(name="tinyllama-1.1b", **kw):
     merged = dict(TINY)

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.kernels import ops, ref
 
@@ -45,6 +45,7 @@ def test_flash_attention_matches_oracle(shape, dtype, causal):
         atol=_tol(dtype), rtol=_tol(dtype))
 
 
+@pytest.mark.slow                   # compiles several block configs: >3 s
 def test_flash_attention_block_sizes():
     B, S, H, dh = 1, 256, 2, 64
     ks = jax.random.split(jax.random.PRNGKey(1), 3)
@@ -66,6 +67,7 @@ WKV_SHAPES = [(1, 128, 2, 32), (2, 256, 4, 64), (1, 100, 2, 64),
               (1, 64, 1, 128)]
 
 
+@pytest.mark.slow                   # scan-kernel compiles: >3 s per case
 @pytest.mark.parametrize("shape", WKV_SHAPES)
 @pytest.mark.parametrize("chunk", [32, 128])
 def test_rwkv6_kernel_matches_oracle(shape, chunk):
@@ -99,6 +101,7 @@ def test_rwkv6_state_carry_decode():
 # chunked attention (pure-jnp flash; the dry-run's XLA path)
 # ----------------------------------------------------------------------
 
+@pytest.mark.slow                   # 40 examples x fresh jit shapes: ~2 min
 @given(
     b=st.integers(1, 2), sq=st.integers(1, 65), skv=st.integers(1, 130),
     h=st.sampled_from([1, 2, 4]), group=st.sampled_from([1, 2]),

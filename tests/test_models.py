@@ -29,7 +29,18 @@ def _batch(arch, B=2, S=16, key=0):
     return batch
 
 
-@pytest.mark.parametrize("name", ALL_ARCHS)
+# jit-compile time makes these >3 s on the big-arch cases; `-m "not slow"`
+# keeps the light-arch forward checks for the fast inner loop
+_HEAVY_ARCHS = {"jamba-1.5-large-398b", "kimi-k2-1t-a32b",
+                "granite-moe-1b-a400m", "whisper-small"}
+
+
+def _arch_params(names):
+    return [pytest.param(n, marks=pytest.mark.slow) if n in _HEAVY_ARCHS
+            else n for n in names]
+
+
+@pytest.mark.parametrize("name", _arch_params(ALL_ARCHS))
 def test_forward_shapes_and_finite(name):
     arch = reduced(get_arch(name))
     model = Model(arch)
@@ -40,6 +51,7 @@ def test_forward_shapes_and_finite(name):
     assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
 
 
+@pytest.mark.slow                   # full jitted train step: >3 s every arch
 @pytest.mark.parametrize("name", ALL_ARCHS)
 def test_one_train_step_no_nans(name):
     arch = reduced(get_arch(name))
@@ -55,6 +67,7 @@ def test_one_train_step_no_nans(name):
     assert bool(jnp.isfinite(loss2))
 
 
+@pytest.mark.slow                   # prefill+decode jit: >3 s every arch
 @pytest.mark.parametrize("name", ["tinyllama-1.1b", "rwkv6-1.6b",
                                   "jamba-1.5-large-398b", "whisper-small",
                                   "kimi-k2-1t-a32b", "qwen2-vl-72b"])
@@ -83,6 +96,7 @@ def test_decode_matches_full_forward(name):
     assert bool(jnp.isfinite(dec_logits.astype(jnp.float32)).all())
 
 
+@pytest.mark.slow                   # compiles three attention variants: >3 s
 def test_attn_impls_agree():
     arch = reduced(get_arch("tinyllama-1.1b"))
     params = Model(arch).init_params(jax.random.PRNGKey(0))
@@ -145,6 +159,7 @@ def test_param_count_matches_model():
             (name, actual, predicted)
 
 
+@pytest.mark.slow                   # 40 optimiser steps: >3 s
 def test_loss_decreases_tiny_training():
     arch = reduced(get_arch("tinyllama-1.1b"), num_layers=2, d_model=64,
                    d_ff=128, vocab_size=128)

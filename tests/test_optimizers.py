@@ -79,6 +79,58 @@ def test_repair_fixes_over_hbm_node():
     assert prob.check(v).ok
 
 
+def test_annealing_never_keeps_infeasible_incumbent():
+    """Regression: SA used to seed best from the repaired initial state even
+    when infeasible, and a feasible-but-higher-objective design visited
+    later could never replace it — the optimiser silently returned an
+    infeasible design. Any feasible evaluation must beat an infeasible
+    incumbent."""
+    import random as _random
+
+    from repro.core.hdgraph import HDGraph, Variables
+    from repro.core.objectives import Evaluation
+
+    arch = reduced(get_arch("tinyllama-1.1b"), num_layers=1)
+    stub_graph = build_hdgraph(arch, TINY_SHAPE)
+    n = len(stub_graph.nodes)
+    feasible_v = Variables((), (2,) * n, (2,) * n, (2,) * n)
+
+    class StubBackend:
+        def initial(self, g):
+            return Variables((), (1,) * n, (1,) * n, (1,) * n)
+
+        def random_move(self, rng, g, v, platform):
+            rng.random()
+            return feasible_v
+
+    class StubReport:
+        ok = True
+        violations = ()
+
+    class StubProblem:
+        """Initial design: infeasible with a LOW objective. Every move:
+        feasible with a HIGHER objective."""
+        graph = stub_graph
+        platform = PLAT
+        backend = StubBackend()
+
+        def check(self, v):
+            return StubReport()                   # repair returns v as-is
+
+        def evaluate(self, v, with_nodes=False):
+            feas = v == feasible_v
+            return Evaluation(
+                objective=10.0 if feas else 1.0, feasible=feas,
+                violations=() if feas else ("stub",),
+                partition_times=(1.0,), reconf_time=0.0,
+                latency=1.0, throughput=1.0)
+
+    res = simulated_annealing(StubProblem(), seed=0, max_iters=50)
+    assert res.evaluation.feasible                # old code returned infeasible
+    assert res.variables == feasible_v
+    assert res.evaluation.objective == 10.0
+
+
 def test_throughput_objective_prefers_partitioning_under_streaming():
     """Paper Fig. 3/4: with batch amortisation, throughput designs tolerate
     many partitions; latency designs consolidate."""

@@ -1,6 +1,6 @@
 """Roofline performance/resource models (paper Eq. 2-7)."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.configs import get_arch, reduced
 from repro.configs.base import ShapeSpec
@@ -110,6 +110,28 @@ def test_decode_state_bytes_present():
     assert attn.state_bytes > 0
     e = node_eval(attn, 1, 1, 1, PLAT, "decode")
     assert e.hbm_resident > attn.weight_bytes     # cache is resident
+
+
+def test_decode_split_kv_combine_respects_kv_limit():
+    """Regression: the decode split-KV partial-softmax combine traffic must
+    divide by min(s_out, kv_limit) — a KV-head cap below s_out means the
+    partials replicate and MORE bytes cross the s_in group, not fewer."""
+    import dataclasses
+
+    arch = reduced(get_arch("tinyllama-1.1b"), num_layers=1)
+    g = build_hdgraph(arch, ShapeSpec("d", 256, 16, "decode"))
+    attn = next(n for n in g.nodes if n.kind == "attn")
+    assert attn.internal_rows                    # decode split-KV node
+    s_in, s_out = 2, 4
+    # collective_kind="none" isolates the split-KV combine term
+    capped = dataclasses.replace(attn, kv_limit=2, collective_kind="none")
+    uncapped = dataclasses.replace(attn, kv_limit=0, collective_kind="none")
+    e_cap = node_eval(capped, s_in, s_out, 1, PLAT, "decode")
+    e_unc = node_eval(uncapped, s_in, s_out, 1, PLAT, "decode")
+    # kv_div = min(4, 2) = 2 vs 4: combine bytes exactly double under the cap
+    assert e_cap.collective_bytes == pytest.approx(
+        2.0 * e_unc.collective_bytes)
+    assert e_cap.collective_bytes > 0
 
 
 @given(si=st.sampled_from([1, 2, 4]), so=st.sampled_from([1, 2, 4]),
