@@ -30,13 +30,17 @@ ALL = {
     "table6": table6_vs_baseline.run,
     "fig4": fig4_batch_partitions.run,
     "roofline": roofline.run,
+    "accel": table4_design_space.run_accel,
     "tests": run_tests,
 }
 
+#: lanes that run only when asked for explicitly
+_ON_DEMAND = ("tests", "accel")
+
 
 def main(argv=None) -> int:
-    # the tests lane runs only when asked for explicitly
-    names = (argv or sys.argv[1:]) or [n for n in ALL if n != "tests"]
+    names = (argv or sys.argv[1:]) or [n for n in ALL
+                                       if n not in _ON_DEMAND]
     for name in names:
         if name not in ALL:
             print(f"unknown benchmark {name!r}; known: {sorted(ALL)}")

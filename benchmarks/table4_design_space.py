@@ -9,13 +9,18 @@ Reproduces the paper's three claims:
   * full enumeration is intractable for everything beyond the smallest
     network — which motivates SA and Rule-Based.
 
-Additionally reports the batched-evaluation engine's throughput
-(core/batched_eval.py): brute-force enumeration through the vectorised
-array program vs the scalar one-point-at-a-time reference, and the
-resulting speedup in design-points/second (the paper's headline metric).
+Additionally reports the evaluation engines' throughput on the same
+enumeration: the scalar one-point-at-a-time reference, the vectorised
+numpy array program (core/batched_eval.py), and the accelerator-resident
+jax engine (core/accel/) whose candidate construction AND evaluation run
+as one jitted XLA program per chunk. The ``accel`` lane
+(``python -m benchmarks.run accel``) focuses on the numpy-vs-jax
+comparison and asserts that both engines return the identical optimum
+design and objective on the largest example space.
 """
 from __future__ import annotations
 
+from repro.core.accel import jax_available
 from repro.core.backends import BACKENDS
 from repro.core.optimizers import brute_force
 from repro.core.platform import AbstractPlatform
@@ -24,46 +29,128 @@ from benchmarks.common import Reporter, fmt_time, make_problem, zoo_arch
 
 NETWORKS = ("3-layer", "TFC", "LeNet", "CNV")
 SCALAR_BUDGET_S = 1.0          # per cell, scalar reference enumeration
-BATCHED_BUDGET_S = 1.0         # per cell, batched enumeration
+BATCHED_BUDGET_S = 1.0         # per cell, numpy/jax enumeration
+NUMPY_BATCH = 16384
+JAX_BATCH = 65536              # jit amortises further at larger chunks
+
+_PLATFORM = AbstractPlatform(name="abstract-16",
+                             mesh_axes=(("data", 4), ("model", 4)))
 
 
-def _rate(make_prob, engine: str, budget_s: float) -> float:
-    """Enumerate the fold space (repeatedly, on fresh Problems so neither
+def _device() -> str:
+    if not jax_available():
+        return "jax unavailable"
+    import jax
+    return f"{jax.default_backend()}:{jax.devices()[0].device_kind}"
+
+
+def _rate(make_prob, engine: str, budget_s: float,
+          batch_size: int = NUMPY_BATCH) -> float:
+    """Enumerate the fold space (repeatedly, on fresh Problems so no
     engine is flattered by the evaluation cache) until the budget elapses.
 
-    Cuts are excluded so both engines measure the IDENTICAL enumeration
-    prefix: with cuts included the batched engine reaches the expensive
-    multi-cut region within its budget while the scalar engine never leaves
-    the no-cut prefix, and the two rates would measure different work."""
+    Cuts are excluded so all engines measure the IDENTICAL enumeration
+    prefix: with cuts included a faster engine reaches the expensive
+    multi-cut region within its budget while a slower one never leaves
+    the no-cut prefix, and the rates would measure different work."""
+    if engine == "jax":
+        # compile outside the timed region (cached per problem family)
+        brute_force(make_prob(), include_cuts=False, max_points=batch_size,
+                    engine=engine, batch_size=batch_size)
     pts, secs = 0, 0.0
     while secs < budget_s:
         res = brute_force(make_prob(), include_cuts=False,
                           time_budget_s=budget_s - secs, engine=engine,
-                          batch_size=16384)
+                          batch_size=batch_size)
         pts += res.points
         secs += max(res.seconds, 1e-9)
     return pts / secs
 
 
+def _check_engine_agreement(max_points: int = 200_000):
+    """numpy and jax must return the identical optimum design AND objective
+    on the largest example space (CNV x spmd). Returns a result dict."""
+    arch = zoo_arch("CNV")
+    make = lambda: make_problem(arch, backend="spmd", platform=_PLATFORM)
+    a = brute_force(make(), include_cuts=False, max_points=max_points,
+                    engine="numpy", batch_size=NUMPY_BATCH)
+    b = brute_force(make(), include_cuts=False, max_points=max_points,
+                    engine="jax", batch_size=NUMPY_BATCH)
+    same_design = a.variables == b.variables
+    # both engines re-derive the returned evaluation through the float64
+    # scalar reference, so agreement here is exact, not approximate
+    same_obj = a.evaluation.objective == b.evaluation.objective
+    return {
+        "points": max_points, "same_design": same_design,
+        "same_objective": same_obj, "objective": a.evaluation.objective,
+    }
+
+
 def run(reporter=None) -> Reporter:
     rep = reporter or Reporter("table4_design_space")
-    plat = AbstractPlatform(name="abstract-16",
-                            mesh_axes=(("data", 4), ("model", 4)))
+    plat = _PLATFORM
+    have_jax = jax_available()
     for net in NETWORKS:
         arch = zoo_arch(net)
         for bname, backend in BACKENDS.items():
             make = lambda: make_problem(arch, backend=bname, platform=plat)
             size = backend.design_space_size(make().graph, plat)
             scalar_rate = _rate(make, "scalar", SCALAR_BUDGET_S)
-            batched_rate = _rate(make, "batched", BATCHED_BUDGET_S)
-            speedup = batched_rate / max(scalar_rate, 1e-9)
+            numpy_rate = _rate(make, "numpy", BATCHED_BUDGET_S)
+            if have_jax:
+                jax_rate = _rate(make, "jax", BATCHED_BUDGET_S, JAX_BATCH)
+                jax_cols = dict(
+                    jax_pts_per_s=f"{jax_rate:.0f}",
+                    jax_speedup=f"{jax_rate / max(numpy_rate, 1e-9):.1f}x")
+            else:
+                jax_rate = 0.0
+                jax_cols = dict(jax_pts_per_s="n/a", jax_speedup="n/a")
+            best_rate = max(numpy_rate, jax_rate)
             rep.add(network=net, backend=bname, size=f"{size:.2e}",
                     scalar_pts_per_s=f"{scalar_rate:.0f}",
-                    batched_pts_per_s=f"{batched_rate:.0f}",
-                    speedup=f"{speedup:.1f}x",
-                    est_full_search=fmt_time(size / max(batched_rate, 1e-9)))
+                    numpy_pts_per_s=f"{numpy_rate:.0f}",
+                    numpy_speedup=f"{numpy_rate/max(scalar_rate,1e-9):.1f}x",
+                    **jax_cols,
+                    est_full_search=fmt_time(size / max(best_rate, 1e-9)))
     rep.print_table("Table IV — design-space size & brute-force rate "
-                    "(scalar vs batched)")
+                    f"(scalar vs numpy vs jax; device {_device()})")
+    if have_jax:
+        agree = _check_engine_agreement()
+        print(f"engine agreement on CNV x spmd ({agree['points']} pts): "
+              f"design identical = {agree['same_design']}, "
+              f"objective identical = {agree['same_objective']} "
+              f"(O(V) = {agree['objective']:.6e})")
+    rep.save()
+    return rep
+
+
+def run_accel(reporter=None) -> Reporter:
+    """The ``accel`` lane: numpy vs jax points/s on the Table-IV space
+    (spmd backend — the largest spaces), plus the agreement check."""
+    rep = reporter or Reporter("accel_engines")
+    if not jax_available():
+        print("accel lane: jax not installed — nothing to compare "
+              "(engine='numpy' remains the fastest available engine)")
+        return rep
+    print(f"accel lane device: {_device()}")
+    for net in NETWORKS:
+        arch = zoo_arch(net)
+        make = lambda: make_problem(arch, backend="spmd",
+                                    platform=_PLATFORM)
+        numpy_rate = _rate(make, "numpy", BATCHED_BUDGET_S)
+        jax_rate = _rate(make, "jax", BATCHED_BUDGET_S, JAX_BATCH)
+        rep.add(network=net, backend="spmd",
+                numpy_pts_per_s=f"{numpy_rate:.0f}",
+                jax_pts_per_s=f"{jax_rate:.0f}",
+                speedup=f"{jax_rate / max(numpy_rate, 1e-9):.1f}x")
+    rep.print_table("Accelerated search — numpy vs jax engine points/s")
+    agree = _check_engine_agreement()
+    print(f"engine agreement on CNV x spmd ({agree['points']} pts): "
+          f"design identical = {agree['same_design']}, "
+          f"objective identical = {agree['same_objective']}")
+    if not (agree["same_design"] and agree["same_objective"]):
+        raise SystemExit("accel lane FAILED: engines disagree on the "
+                         "optimum design/objective")
     rep.save()
     return rep
 

@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# CI inner loop: tier-1 suite on CPU-only jax.
+#
+# JAX_PLATFORMS=cpu pins jax to the CPU backend so the jitted accel paths
+# (core/accel/: engine parity, on-device brute force, device SA, Pallas
+# interpret mode) are exercised on every PR without an accelerator.
+# `-m "not slow"` keeps it under ~2 min; run `python -m pytest` with no
+# filter (or `python -m benchmarks.run tests`) for the full suite, and
+# `python -m benchmarks.run accel` for the numpy-vs-jax engine lane.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+export JAX_PLATFORMS=cpu
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q -m "not slow" "$@"

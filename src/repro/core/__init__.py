@@ -4,6 +4,12 @@ Pipeline: parser (graph_builder) -> HD-Graph -> optimiser (brute-force /
 simulated annealing / rule-based) over V = {C, s^I, s^O, k} under Eq. 6-10
 constraints -> exporter -> ShardingPlan consumed by launch/{dryrun,train,serve}.
 """
+from repro.core.accel import (
+    ENGINES,
+    EngineUnavailable,
+    jax_available,
+    resolve_engine,
+)
 from repro.core.platform import Platform, AbstractPlatform, V5E_POD, V5E_2POD
 from repro.core.hdgraph import (
     HDGraph,
@@ -27,6 +33,7 @@ from repro.core.optimizers import (
 )
 
 __all__ = [
+    "ENGINES", "EngineUnavailable", "jax_available", "resolve_engine",
     "Platform", "AbstractPlatform", "V5E_POD", "V5E_2POD",
     "HDGraph", "Node", "Variables", "partitions_from_cuts", "resource_minimal",
     "build_hdgraph",

@@ -1,0 +1,81 @@
+"""Accelerator-resident design-space search (the Table-IV hot path on JAX).
+
+``core/batched_eval.py`` laid the evaluation out as pure elementwise ops plus
+segment reductions over a static node axis precisely so it could be jitted;
+this package is that jit. It holds three layers:
+
+  lowering.py      BatchedEvaluator flat numpy arrays -> a pytree of device
+                   constants (``DeviceArrays``) + a hashable ``StaticSpec``
+                   so the jitted programs cache across Problem instances.
+  eval_jax.py      the jitted ``evaluate_batch`` array program
+                   (``jax.ops.segment_max/segment_sum`` for partition times,
+                   optionally a Pallas segmented-reduction kernel with an
+                   interpret-mode fallback on CPU).
+  search_loops.py  on-device candidate *construction*: mixed-radix digit
+                   decode for brute-force chunks and a ``jax.random``-driven
+                   multi-chain simulated-annealing sweep on ``lax.scan``.
+
+Engine registry
+---------------
+The optimisers select an evaluation engine by name:
+
+  scalar   the original one-design-at-a-time reference (perfmodel.py)
+  numpy    the vectorised host array program (batched_eval.py)
+  jax      this package: jitted, accelerator-resident construction + eval
+
+``resolve_engine`` maps names (plus the aliases ``auto`` and the legacy
+``batched``) onto an available engine and raises ``EngineUnavailable`` with
+the missing extra spelled out instead of an ImportError mid-search.
+"""
+from __future__ import annotations
+
+import importlib.util
+
+ENGINES = ("scalar", "numpy", "jax")
+
+#: legacy / convenience aliases accepted everywhere an engine name is
+_ALIASES = {"batched": "numpy", "auto": "auto"}
+
+
+class EngineUnavailable(RuntimeError):
+    """A search engine was requested whose dependency is not installed."""
+
+
+def jax_available() -> bool:
+    """True when the ``jax`` engine can be used in this environment."""
+    return importlib.util.find_spec("jax") is not None
+
+
+def require_jax(feature: str = "the 'jax' search engine"):
+    """Import and return jax, or raise a clear EngineUnavailable."""
+    if not jax_available():
+        raise EngineUnavailable(
+            f"{feature} requires jax, which is not installed in this "
+            f"environment. Install the 'jax' extra (pip install jax) or "
+            f"select engine='numpy' / engine='scalar' instead.")
+    import jax
+    return jax
+
+
+def resolve_engine(name: str, *, allow_fallback: bool = True) -> str:
+    """Normalise an engine name and check availability.
+
+    ``auto`` picks ``jax`` when available, else ``numpy``. An explicit
+    ``jax`` request with jax missing raises ``EngineUnavailable`` unless
+    ``allow_fallback`` is set, in which case it degrades to ``numpy``.
+    """
+    name = _ALIASES.get(name, name)
+    if name == "auto":
+        return "jax" if jax_available() else "numpy"
+    if name not in ENGINES:
+        raise ValueError(f"unknown engine {name!r}; known: "
+                         f"{ENGINES + tuple(a for a in _ALIASES if a != 'auto')}")
+    if name == "jax" and not jax_available():
+        if allow_fallback:
+            return "numpy"
+        require_jax()
+    return name
+
+
+__all__ = ["ENGINES", "EngineUnavailable", "jax_available", "require_jax",
+           "resolve_engine"]

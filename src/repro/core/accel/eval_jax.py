@@ -1,0 +1,430 @@
+"""Jitted batched design-point evaluation (the JAX port of batched_eval).
+
+``_eval_core`` is a line-for-line port of
+``BatchedEvaluator.evaluate_batch`` + ``_collective_bytes`` onto jnp: pure
+elementwise ops, static kind-column slices, and segmented partition
+reductions via ``jax.ops.segment_max/segment_sum`` (or the Pallas kernel in
+``pallas_segred.py`` when ``StaticSpec.use_pallas`` is set). The numpy
+engine always takes the general segmented path here — its no-cut fast path
+is a host-side shortcut with identical semantics, so agreement holds across
+both layouts.
+
+Entry points are module-level and take ``(static, arrays, ...)`` so the XLA
+executable caches across Problem instances (see lowering.py). Large integer
+products (batch x rows x fm_width) are formed in the float dtype to stay
+safe under int32 (the default device int width without x64).
+
+Precision contract (tests/test_accel_engine.py):
+  float32 (default)   objective/times/residency agree with the scalar
+                      reference to ~1e-5 relative; feasibility is exact on
+                      the example spaces (constraints are integer-exact or
+                      far from their float thresholds).
+  float64 (x64 on)    1e-9 agreement, matching the numpy engine's contract.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.accel.lowering import (
+    DeviceArrays,
+    StaticSpec,
+    lower_program,
+)
+from repro.core.batched_eval import BatchResult
+from repro.core.perfmodel import (
+    BF16,
+    TRAIN_STATE_MULT,
+    ZERO1_RESIDENT,
+    ZERO1_SHARDED,
+)
+
+
+# ----------------------------------------------------------------------
+# the traced array program
+# ----------------------------------------------------------------------
+
+def _frac(x):
+    return (x - 1.0) / x
+
+
+def _collective_bytes(static: StaticSpec, A: DeviceArrays,
+                      si, so, kk, sif, sof, kkf, b_in):
+    """Traced port of BatchedEvaluator._collective_bytes."""
+    fdt = sif.dtype
+    mode = static.mode
+    train_mult = 2.0 if static.train else 1.0
+    total = jnp.zeros_like(sif)
+    batchf = A.batch.astype(fdt)
+    rowsf = A.rows.astype(fdt)
+    colsf = A.cols.astype(fdt)
+    fmf = A.fm_width.astype(fdt)
+
+    def fm_shard(ix):
+        rows = rowsf[ix] if mode != "decode" else 1.0
+        return (batchf[ix] * rows * fmf[ix]) * BF16 / (b_in[:, ix] * kkf[:, ix])
+
+    if static.i_tp:
+        ix = np.asarray(static.i_tp)
+        total = total.at[:, ix].add(
+            2.0 * _frac(sof[:, ix]) * fm_shard(ix) * train_mult)
+    if static.i_ep:
+        ix = np.asarray(static.i_ep)
+        rows = rowsf[ix] if mode != "decode" else 1.0
+        tokens_shard = (batchf[ix] * rows) / (b_in[:, ix] * kkf[:, ix])
+        fanout = jnp.maximum(A.ep_topk[ix], 1).astype(fdt)
+        total = total.at[:, ix].add(
+            2.0 * tokens_shard * fanout * fmf[ix] * BF16
+            * _frac(sof[:, ix]) * train_mult)
+    if static.i_vocab:
+        ix = np.asarray(static.i_vocab)
+        total = total.at[:, ix].add(2.0 * _frac(sof[:, ix]) * fm_shard(ix))
+    if static.i_vhead:
+        ix = np.asarray(static.i_vhead)
+        if mode == "decode":
+            total = total.at[:, ix].add(
+                colsf[ix] * BF16 * batchf[ix] / kkf[:, ix]
+                * _frac(sof[:, ix]))
+        else:
+            # distributed softmax stats: constant in s_out, so the scalar
+            # path's s_out > 1 guard must be kept explicitly
+            vh = 2.0 * 8.0 * (batchf[ix] * rowsf[ix]) \
+                / (b_in[:, ix] * kkf[:, ix])
+            total = total.at[:, ix].add(
+                jnp.where(so[:, ix] > 1, vh, jnp.zeros_like(vh)))
+
+    # sequence/context parallelism (s_in > 1): all terms carry the
+    # (s_in-1)/s_in factor, vanishing at s_in = 1
+    if static.i_int:
+        ix = np.asarray(static.i_int)
+        kvl = A.kv_limit[ix]
+        kv_div = jnp.where(kvl > 0,
+                           jnp.minimum(sof[:, ix], kvl.astype(fdt)),
+                           jnp.maximum(sof[:, ix], 1.0))
+        dh = fmf[ix] / jnp.maximum(colsf[ix], 1.0)
+        total = total.at[:, ix].add(
+            (batchf[ix] / kkf[:, ix]) * colsf[ix]
+            / jnp.maximum(kv_div, 1.0) * (dh + 2.0) * 4.0
+            * _frac(sif[:, ix]))
+    if static.i_kv:
+        ix = np.asarray(static.i_kv)
+        kvl = A.kv_limit[ix]
+        kv_div2 = jnp.where(kvl > 0,
+                            jnp.minimum(sof[:, ix], kvl.astype(fdt)),
+                            jnp.maximum(sof[:, ix], 1.0)) * kkf[:, ix]
+        total = total.at[:, ix].add(
+            A.kv_bytes[ix] / kv_div2 * _frac(sif[:, ix]) * train_mult)
+    if static.i_carry:
+        ix = np.asarray(static.i_carry)
+        total = total.at[:, ix].add(
+            A.carry_bytes[ix] / kkf[:, ix] * _frac(sif[:, ix]) * train_mult)
+
+    # data-parallel gradient all-reduce (per step, ring over k)
+    if static.train:
+        grad = A.weight_bytes / sof * 2.0 * static.grad_compression
+        total = total + 2.0 * _frac(kkf) * grad
+    return total
+
+
+def _realizable(static: StaticSpec, A: DeviceArrays, si, so, kk):
+    cap = static.val_cap                      # sentinel lut slot (-1)
+    lut = A.val_lut
+    ia = lut[jnp.minimum(si, cap)]
+    ib = lut[jnp.minimum(so, cap)]
+    ic = lut[jnp.minimum(kk, cap)]
+    known = (ia >= 0) & (ib >= 0) & (ic >= 0)
+    return known & A.real_table[jnp.maximum(ia, 0),
+                                jnp.maximum(ib, 0),
+                                jnp.maximum(ic, 0)]
+
+
+def _eval_core(static: StaticSpec, A: DeviceArrays,
+               si, so, kk, cb, single_partition: bool = False
+               ) -> Dict[str, jax.Array]:
+    """The batched array program on device; [N, n] fold arrays + [N, n-1]
+    cut bitmask -> per-candidate results (a dict of jnp arrays).
+
+    ``single_partition`` is a trace-time promise that every row of ``cb``
+    is all-False (e.g. a brute-force chunk of the no-cut set): the
+    partition machinery collapses to one max/sum over the node axis — the
+    device analogue of the numpy engine's fast path."""
+    n = static.n_nodes
+    N = si.shape[0]
+    fdt = A.flops.dtype
+    idt = A.batch.dtype
+    si = si.astype(idt)
+    so = so.astype(idt)
+    kk = kk.astype(idt)
+    cb = cb.astype(bool)
+    sif = si.astype(fdt)
+    sof = so.astype(fdt)
+    kkf = kk.astype(fdt)
+
+    # ---------------- node roofline (perfmodel.node_eval) ----------
+    c = sif * sof * kkf
+    b_in = jnp.where(A.internal[None, :], jnp.ones((), fdt), sif)
+    compute_s = (A.flops / c) / (static.peak_flops * static.mxu_efficiency)
+
+    w_per_chip = A.weight_bytes / sof
+    act_per_chip = A.act_bytes / (b_in * kkf)
+    inner_per_chip = A.inner_bytes / c
+
+    # _state_sharding (KV sharding applies on attention-kind columns)
+    state_div = kkf * sof
+    state_repl = jnp.ones_like(sof)
+    if static.i_attn:
+        ia = np.asarray(static.i_attn)
+        kvl = A.kv_limit[ia]
+        kv_div_a = jnp.where(kvl > 0,
+                             jnp.minimum(sof[:, ia], kvl.astype(fdt)),
+                             sof[:, ia])
+        state_div = state_div.at[:, ia].set(
+            kkf[:, ia] * jnp.maximum(kv_div_a, 1.0) * sif[:, ia])
+        state_repl = state_repl.at[:, ia].set(
+            jnp.where((kvl > 0) & (so[:, ia] > kvl),
+                      sof[:, ia] / kv_div_a, jnp.ones_like(kv_div_a)))
+    state_per_chip = A.state_bytes * state_repl / state_div
+
+    train_mult = 3.0 if static.train else 1.0
+    hbm = (act_per_chip + inner_per_chip) * train_mult
+    if static.train:
+        hbm = hbm + 2.0 * w_per_chip
+    else:
+        hbm = hbm + jnp.where(A.weight_stream, w_per_chip,
+                              jnp.zeros_like(w_per_chip))
+        hbm = hbm + state_per_chip
+    memory_s = hbm / static.hbm_bw
+
+    coll = _collective_bytes(static, A, si, so, kk, sif, sof, kkf, b_in)
+    collective_s = coll / static.ici_bw * (1.0 - static.overlap_collectives)
+
+    # ---------------- residency (Eq. 6) ----------------------------
+    if static.train:
+        if static.zero1:
+            resident = w_per_chip * ZERO1_RESIDENT \
+                + w_per_chip * ZERO1_SHARDED / kkf
+        else:
+            resident = w_per_chip * TRAIN_STATE_MULT
+        stash_div = sif * kkf
+        if static.seq_parallel_stash:
+            stash_div = stash_div * jnp.maximum(sof, 1.0)
+        fm = A.node_d / BF16                   # batch*rows*fm_width, exact
+        resident = resident + fm * BF16 / stash_div
+        if static.i_head:
+            ih = np.asarray(static.i_head)
+            resident = resident.at[:, ih].add(
+                3.0 * A.inner_bytes[ih]
+                / (b_in[:, ih] * kkf[:, ih] * jnp.maximum(sof[:, ih], 1.0)))
+    else:
+        rows = (jnp.ones_like(A.rows) if static.decode else A.rows).astype(fdt)
+        resident = w_per_chip + state_per_chip \
+            + 2.0 * A.batch.astype(fdt) * rows * A.fm_width.astype(fdt) \
+            * BF16 / (b_in * kkf)
+
+    node_time = jnp.maximum(jnp.maximum(compute_s, memory_s), collective_s)
+
+    # ---------------- partition structure ---------------------------
+    # (the numpy engine's no-cut fast path is a host shortcut; the general
+    # segmented path below is exact for the no-cut case too)
+    if n > 1:
+        mism = (b_in[:, :-1] != b_in[:, 1:]) | (kk[:, :-1] != kk[:, 1:])
+    else:
+        mism = jnp.zeros((N, 0), bool)
+    iota_n = jnp.arange(n, dtype=idt)
+
+    if single_partition:
+        # fast path (trace-time): every candidate is one partition — no
+        # segment reductions, no reconfiguration, no boundary staging
+        pid = jnp.zeros((N, n), idt)
+        nparts = jnp.ones((N,), idt)
+        part_valid = iota_n[None, :] < 1
+        t0 = node_time.max(axis=1) if static.exec_model == "streaming" \
+            else node_time.sum(axis=1)
+        if not static.inter_matching and n > 1:
+            t0 = t0 + jnp.where(
+                mism, A.reshard_full[:-1] / static.ici_bw, 0.0).sum(axis=1)
+        t_part = jnp.zeros((N, n), t0.dtype).at[:, 0].set(t0)
+        reconf = jnp.zeros((N,), fdt)
+        sum_t = t0
+    else:
+        pid = jnp.concatenate(
+            [jnp.zeros((N, 1), idt), jnp.cumsum(cb.astype(idt), axis=1)],
+            axis=1)
+        nparts = pid[:, -1] + 1
+        part_valid = iota_n[None, :] < nparts[:, None]
+        # Segmented reductions over the (tiny, static) node axis are dense:
+        # a [N, n_src, n_part] partition one-hot turns seg-sum into a
+        # batched matvec and seg-max into a masked max — XLA lowers both to
+        # vector code, where a scatter-based segment_sum would serialise.
+        onehot = pid[:, :, None] == iota_n[None, None, :]
+        onehot_f = onehot.astype(fdt)
+
+        def seg_sum(vals):
+            return jnp.einsum("rj,rjp->rp", vals, onehot_f)
+
+        def seg_max(vals):
+            return jnp.max(jnp.where(onehot, vals[:, :, None], -jnp.inf),
+                           axis=1)
+
+        if static.use_pallas:
+            from repro.core.accel.pallas_segred import segmented_reduce
+            t_raw = segmented_reduce(node_time, pid,
+                                     "max" if static.exec_model ==
+                                     "streaming" else "sum",
+                                     interpret=static.pallas_interpret)
+            t_base = jnp.where(part_valid, t_raw, 0.0) \
+                if static.exec_model == "streaming" else t_raw
+        elif static.exec_model == "streaming":
+            t_base = jnp.where(part_valid, seg_max(node_time), 0.0)
+        else:
+            t_base = seg_sum(node_time)
+
+        t_part = t_base
+        if not static.inter_matching and n > 1:
+            # resharding collectives at intra-partition layout changes
+            edge_t = jnp.where(~cb & mism,
+                               A.reshard_full[:-1] / static.ici_bw, 0.0)
+            reshard = jnp.einsum("rj,rjp->rp", edge_t, onehot_f[:, :-1, :])
+            t_part = t_part + reshard
+        t_part = jnp.where(part_valid, t_part, 0.0)
+
+        # reconfiguration (Eq. 3): first configuration is pre-loaded
+        w_part = seg_sum(w_per_chip)
+        t_conf_part = static.reconf_fixed_s + w_part / static.dma_bw
+        later = part_valid & (iota_n[None, :] >= 1)
+        reconf = jnp.sum(jnp.where(later, t_conf_part, 0.0), axis=1)
+
+        sum_t = t_part.sum(axis=1)
+    latency = sum_t + reconf
+    Bam = float(static.batch_amortisation)
+    thr_time = Bam * sum_t + reconf
+    throughput = jnp.where(thr_time > 0,
+                           Bam / jnp.where(thr_time > 0, thr_time, 1.0), 0.0)
+    obj = latency if static.objective == "latency" else -throughput
+
+    # ---------------- constraints ----------------------------------
+    bad = jnp.zeros(N, bool)
+    # channel factor (Eq. 8) + cut legality + mesh realisability
+    if n > 1:
+        bad |= (cb & ~A.cut_allowed[None, :]).any(axis=1)
+    bad |= (A.rows % si != 0).any(axis=1)
+    bad |= (A.col_div % so != 0).any(axis=1)
+    bad |= (A.batch % kk != 0).any(axis=1)
+    if static.strict_kv:
+        bad |= ((A.kv_limit > 0) & (so > A.kv_limit)).any(axis=1)
+    bad |= ~_realizable(static, A, si, so, kk).all(axis=1)
+    # intra matching (Eq. 9)
+    if static.intra_matching:
+        bad |= (A.elementwise & (si != so)).any(axis=1)
+    # inter matching (Eq. 10), partition-local
+    if static.inter_matching and n > 1:
+        bad |= (~cb & mism).any(axis=1)
+    # scan tying, partition-local
+    if static.scan_tying and static.scan_pairs:
+        a = np.asarray([p[0] for p in static.scan_pairs])
+        b = np.asarray([p[1] for p in static.scan_pairs])
+        differ = (si[:, a] != si[:, b]) | (so[:, a] != so[:, b]) \
+            | (kk[:, a] != kk[:, b])
+        differ &= pid[:, a] == pid[:, b]
+        bad |= differ.any(axis=1)
+    # resource (Eq. 6) + streaming chip budget + bandwidth (Eq. 7)
+    if single_partition:
+        bad |= resident.sum(axis=1) > static.hbm_bytes
+        if static.exec_model == "streaming":
+            bad |= c.sum(axis=1) > static.chips
+        # single partition: no boundary staging, bandwidth never binds
+    else:
+        res_part = seg_sum(resident)
+        multi = nparts > 1
+        start = jnp.concatenate([jnp.ones((N, 1), bool), cb], axis=1)
+        end = jnp.concatenate([cb, jnp.ones((N, 1), bool)], axis=1)
+        d_io = seg_sum(A.node_d[None, :]
+                       * (start.astype(fdt) + end.astype(fdt)))
+        res_tot = res_part + jnp.where(multi[:, None],
+                                       d_io / static.chips, 0.0)
+        bad |= (part_valid & (res_tot > static.hbm_bytes)).any(axis=1)
+        if static.exec_model == "streaming":
+            chips_part = seg_sum(c)
+            bad |= (part_valid & (chips_part > static.chips)).any(axis=1)
+        # bandwidth uses the pre-resharding partition interval, exactly
+        # like constraints.check_bandwidth
+        bw = static.hbm_bw * static.chips
+        bw_bad = multi[:, None] & part_valid & (t_base > 0) \
+            & (d_io / jnp.where(t_base > 0, t_base, 1.0) > bw)
+        bad |= bw_bad.any(axis=1)
+
+    return {
+        "objective": obj, "feasible": ~bad, "latency": latency,
+        "throughput": throughput, "part_times": t_part, "nparts": nparts,
+        "reconf_time": reconf, "node_resident": resident,
+        "node_times": node_time, "node_collective": coll,
+    }
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def evaluate_batch_jax(static: StaticSpec, arrays: DeviceArrays,
+                       si, so, kk, cb) -> Dict[str, jax.Array]:
+    """Jitted standalone evaluate; cached per (StaticSpec, shapes)."""
+    return _eval_core(static, arrays, si, so, kk, cb)
+
+
+# ----------------------------------------------------------------------
+# host-facing wrapper
+# ----------------------------------------------------------------------
+
+class JaxEvaluator:
+    """Device-resident counterpart of ``BatchedEvaluator``.
+
+    Shares the host lowering (packing helpers, base designs, clamp/scope
+    semantics) and evaluates through the jitted array program. Results come
+    back as a numpy ``BatchResult`` so callers are engine-agnostic.
+    """
+
+    def __init__(self, bev, *, use_pallas: bool = False,
+                 pallas_interpret=None):
+        self.bev = bev
+        self.static, self.arrays = lower_program(
+            bev, use_pallas=use_pallas, pallas_interpret=pallas_interpret)
+
+    @classmethod
+    def from_problem(cls, problem, **kw) -> "JaxEvaluator":
+        return cls(problem.batched(), **kw)
+
+    # packing delegates to the host evaluator (same layout)
+    def pack(self, designs):
+        return self.bev.pack(designs)
+
+    def unpack_row(self, si, so, kk, cb, row):
+        return self.bev.unpack_row(si, so, kk, cb, row)
+
+    def evaluate_batch(self, s_in, s_out, kern, cuts) -> BatchResult:
+        si = np.asarray(s_in)
+        so = np.asarray(s_out)
+        kk = np.asarray(kern)
+        cb = np.asarray(cuts, bool)
+        N, n = si.shape
+        if n != self.bev.n_nodes or so.shape != si.shape \
+                or kk.shape != si.shape or cb.shape != (N, max(n - 1, 0)):
+            raise ValueError(
+                f"expected fold arrays [N, {self.bev.n_nodes}] and cut mask "
+                f"[N, {self.bev.n_nodes - 1}]; got s_in {si.shape}, s_out "
+                f"{so.shape}, kern {kk.shape}, cuts {cb.shape}")
+        out = evaluate_batch_jax(self.static, self.arrays, si, so, kk, cb)
+        out = jax.device_get(out)
+        return BatchResult(
+            objective=np.asarray(out["objective"], np.float64),
+            feasible=np.asarray(out["feasible"], bool),
+            latency=np.asarray(out["latency"], np.float64),
+            throughput=np.asarray(out["throughput"], np.float64),
+            part_times=np.asarray(out["part_times"], np.float64),
+            nparts=np.asarray(out["nparts"], np.int64),
+            reconf_time=np.asarray(out["reconf_time"], np.float64),
+            node_resident=np.asarray(out["node_resident"], np.float64),
+            node_times=np.asarray(out["node_times"], np.float64),
+            node_collective=np.asarray(out["node_collective"], np.float64),
+        )

@@ -1,0 +1,245 @@
+"""Lowering: BatchedEvaluator flat numpy arrays -> JAX device constants.
+
+The host lowering (``core/batched_eval.py``) already flattens an HDGraph +
+Platform + ModelOptions into per-node numpy arrays; this module converts that
+result into the two halves a jitted program needs:
+
+  ``StaticSpec``    an immutable, hashable bundle of everything that shapes
+                    the traced program: mode/backend/objective flags, the
+                    platform scalars, and the kind-specific column index
+                    sets (static python tuples, so kind terms compile to
+                    fixed slices, exactly like the numpy engine).
+  ``DeviceArrays``  a NamedTuple pytree of ``jnp`` arrays: per-node
+                    workload quantities, masks, and the mesh-realisability
+                    lookup table.
+
+Because ``StaticSpec`` is hashable and the jitted entry points are plain
+module-level functions taking (static, arrays, ...), XLA compilation caches
+across Problem instances: two problems with the same graph family, platform
+and flags hit the same executable.
+
+Precision: device arrays are float32/int32 unless jax x64 is enabled
+(``jax.config.update("jax_enable_x64", True)``), in which case the lowering
+emits float64/int64 and the engine agrees with the scalar reference at 1e-9
+(see tests/test_accel_engine.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple, Tuple
+
+import numpy as np
+
+from repro.core.accel import EngineUnavailable, require_jax
+
+#: realisability tables are built by calling ``platform.folds_realizable``
+#: over the fold-value cube; above this menu size the cube is too expensive
+#: to enumerate scalar-by-scalar for platforms without a product rule.
+MAX_TABLE_VALUES = 64
+
+
+@dataclass(frozen=True)
+class StaticSpec:
+    """Hashable trace-shaping configuration for the jitted array program."""
+
+    n_nodes: int
+    mode: str                       # train | prefill | decode
+    exec_model: str                 # streaming | spmd
+    objective: str                  # latency | throughput
+    strict_kv: bool
+    intra_matching: bool
+    inter_matching: bool
+    scan_tying: bool
+    batch_amortisation: int
+    # ModelOptions
+    zero1: bool
+    seq_parallel_stash: bool
+    grad_compression: float
+    mxu_efficiency: float
+    overlap_collectives: float
+    # Platform scalars
+    peak_flops: float
+    hbm_bw: float
+    hbm_bytes: float
+    ici_bw: float
+    dma_bw: float
+    reconf_fixed_s: float
+    chips: int
+    # kind-specific static column index sets (see batched_eval._lower)
+    i_attn: Tuple[int, ...]
+    i_head: Tuple[int, ...]
+    i_tp: Tuple[int, ...]
+    i_ep: Tuple[int, ...]
+    i_vocab: Tuple[int, ...]
+    i_vhead: Tuple[int, ...]
+    i_int: Tuple[int, ...]
+    i_kv: Tuple[int, ...]
+    i_carry: Tuple[int, ...]
+    scan_pairs: Tuple[Tuple[int, int], ...]
+    scan_groups: Tuple[Tuple[int, ...], ...]   # member lists per scan group
+    val_cap: int                    # realisability lut sentinel slot
+    use_pallas: bool = False        # Pallas segmented reduction for T(P_i)
+    pallas_interpret: bool = False  # interpret-mode fallback (CPU)
+
+    @property
+    def train(self) -> bool:
+        return self.mode == "train"
+
+    @property
+    def decode(self) -> bool:
+        return self.mode == "decode"
+
+
+class DeviceArrays(NamedTuple):
+    """Per-node device constants (a pytree; all leaves are jnp arrays)."""
+
+    flops: "jax.Array"
+    weight_bytes: "jax.Array"
+    act_bytes: "jax.Array"
+    inner_bytes: "jax.Array"
+    state_bytes: "jax.Array"
+    kv_bytes: "jax.Array"
+    carry_bytes: "jax.Array"
+    node_d: "jax.Array"
+    reshard_full: "jax.Array"
+    batch: "jax.Array"
+    rows: "jax.Array"
+    cols: "jax.Array"
+    fm_width: "jax.Array"
+    col_div: "jax.Array"
+    kv_limit: "jax.Array"
+    ep_topk: "jax.Array"
+    scan_group: "jax.Array"
+    internal: "jax.Array"
+    elementwise: "jax.Array"
+    weight_stream: "jax.Array"
+    cut_allowed: "jax.Array"
+    real_table: "jax.Array"         # [nv, nv, nv] bool over the fold menu
+    val_lut: "jax.Array"            # fold value -> menu index (-1 unknown)
+
+
+def _realizability_table(bev) -> Tuple[np.ndarray, np.ndarray, int]:
+    """(table, lut, cap) — reuse the host evaluator's table, or build one.
+
+    ``batched_eval`` builds the cube only for menus of <= 24 values; the jax
+    engine needs it always (the memoised unique-triple fallback is a host
+    loop). AbstractPlatform realisability is a pure product rule, so its
+    cube vectorises at any size; generic platforms are enumerated up to
+    ``MAX_TABLE_VALUES`` menu entries.
+    """
+    if getattr(bev, "_real_table", None) is not None:
+        return bev._real_table, bev._val_lut, bev._val_max + 1
+
+    plat = bev.platform
+    vals = np.asarray(plat.fold_values(), np.int64)
+    nv = len(vals)
+    # duck-typed product rule (AbstractPlatform): realisable iff the product
+    # of folds fits the mesh — vectorise instead of nv^3 scalar calls.
+    from repro.core.platform import AbstractPlatform
+    if isinstance(plat, AbstractPlatform):
+        prod = vals[:, None, None] * vals[None, :, None] * vals[None, None, :]
+        table = prod <= plat.chips
+    elif nv <= MAX_TABLE_VALUES:
+        table = np.zeros((nv, nv, nv), bool)
+        for a, fa in enumerate(vals):
+            for b, fb in enumerate(vals):
+                for d, fd in enumerate(vals):
+                    table[a, b, d] = plat.folds_realizable((fa, fb, fd))
+    else:
+        raise EngineUnavailable(
+            f"platform {plat.name!r} has {nv} fold values; the jax engine "
+            f"needs a dense realisability table (<= {MAX_TABLE_VALUES} "
+            f"values) or an AbstractPlatform product rule. Use "
+            f"engine='numpy' for this platform.")
+    val_max = int(vals[-1])
+    lut = np.full(val_max + 2, -1, np.int64)
+    lut[vals] = np.arange(nv)
+    return table, lut, val_max + 1
+
+
+def lower_program(bev, *, use_pallas: bool = False,
+                  pallas_interpret: bool | None = None
+                  ) -> Tuple[StaticSpec, DeviceArrays]:
+    """Lower a host ``BatchedEvaluator`` onto the default jax device.
+
+    ``use_pallas`` routes the partition-time segmented reduction through the
+    Pallas kernel (the TPU hot path); ``pallas_interpret`` forces interpret
+    mode (defaults to True off-TPU so the kernel stays runnable on CPU).
+    """
+    jax = require_jax()
+    import jax.numpy as jnp
+
+    x64 = jax.config.jax_enable_x64
+    fdt = jnp.float64 if x64 else jnp.float32
+    idt = jnp.int64 if x64 else jnp.int32
+
+    table, lut, cap = _realizability_table(bev)
+    if pallas_interpret is None:
+        pallas_interpret = jax.default_backend() != "tpu"
+
+    plat, opts = bev.platform, bev.opts
+    static = StaticSpec(
+        n_nodes=bev.n_nodes,
+        mode=bev.mode,
+        exec_model=bev.exec_model,
+        objective=bev.objective,
+        strict_kv=bev.strict_kv,
+        intra_matching=bev.intra_matching,
+        inter_matching=bev.inter_matching,
+        scan_tying=bev.scan_tying,
+        batch_amortisation=bev.batch_amortisation,
+        zero1=opts.zero1,
+        seq_parallel_stash=opts.seq_parallel_stash,
+        grad_compression=opts.grad_compression,
+        mxu_efficiency=opts.mxu_efficiency,
+        overlap_collectives=opts.overlap_collectives,
+        peak_flops=float(plat.peak_flops),
+        hbm_bw=float(plat.hbm_bw),
+        hbm_bytes=float(plat.hbm_bytes),
+        ici_bw=float(plat.ici_bw),
+        dma_bw=float(plat.dma_bw),
+        reconf_fixed_s=float(plat.reconf_fixed_s),
+        chips=plat.chips,
+        i_attn=tuple(map(int, bev.i_attn)),
+        i_head=tuple(map(int, bev.i_head)),
+        i_tp=tuple(map(int, bev.i_tp)),
+        i_ep=tuple(map(int, bev.i_ep)),
+        i_vocab=tuple(map(int, bev.i_vocab)),
+        i_vhead=tuple(map(int, bev.i_vhead)),
+        i_int=tuple(map(int, bev.i_int)),
+        i_kv=tuple(map(int, bev.i_kv)),
+        i_carry=tuple(map(int, bev.i_carry)),
+        scan_pairs=tuple((int(a), int(b)) for a, b in bev.scan_pairs),
+        scan_groups=tuple(tuple(m) for m
+                          in bev.graph.scan_groups().values()),
+        val_cap=cap,
+        use_pallas=use_pallas,
+        pallas_interpret=pallas_interpret,
+    )
+
+    arrays = DeviceArrays(
+        flops=jnp.asarray(bev.flops, fdt),
+        weight_bytes=jnp.asarray(bev.weight_bytes, fdt),
+        act_bytes=jnp.asarray(bev.act_bytes, fdt),
+        inner_bytes=jnp.asarray(bev.inner_bytes, fdt),
+        state_bytes=jnp.asarray(bev.state_bytes, fdt),
+        kv_bytes=jnp.asarray(bev.kv_bytes, fdt),
+        carry_bytes=jnp.asarray(bev.carry_bytes, fdt),
+        node_d=jnp.asarray(bev.node_d, fdt),
+        reshard_full=jnp.asarray(bev.reshard_full, fdt),
+        batch=jnp.asarray(bev.batch, idt),
+        rows=jnp.asarray(bev.rows, idt),
+        cols=jnp.asarray(bev.cols, idt),
+        fm_width=jnp.asarray(bev.fm_width, idt),
+        col_div=jnp.asarray(bev.col_div, idt),
+        kv_limit=jnp.asarray(bev.kv_limit, idt),
+        ep_topk=jnp.asarray(bev.ep_topk, idt),
+        scan_group=jnp.asarray(bev.scan_group, idt),
+        internal=jnp.asarray(bev.internal),
+        elementwise=jnp.asarray(bev.elementwise),
+        weight_stream=jnp.asarray(bev.weight_stream),
+        cut_allowed=jnp.asarray(bev.cut_allowed),
+        real_table=jnp.asarray(table),
+        val_lut=jnp.asarray(lut, idt),
+    )
+    return static, arrays

@@ -1,0 +1,65 @@
+"""Pallas segmented reduction for the partition-time hot path.
+
+Partition times are a per-candidate segmented reduction of node times over a
+monotone partition-id vector: ``T[r, p] = reduce_{j: pid[r,j]==p} t[r, j]``
+(max under the streaming model, sum under spmd). On TPU the generic
+``jax.ops.segment_*`` lowering scatters into an ``[N*n]`` buffer; this kernel
+instead keeps each candidate row in VMEM and unrolls the (static, small)
+partition axis, so the reduction is ``n`` masked row-reductions on the VPU
+with no scatter at all.
+
+The node axis ``n`` is tiny (one transformer graph: tens of nodes) while the
+candidate axis ``N`` is huge (a brute-force chunk), so the grid tiles
+candidates and the unrolled ``n x n`` work per tile stays negligible.
+
+On CPU the kernel runs in interpret mode (``interpret=True``) so the same
+code path is exercised by the test suite; the jax engine only routes through
+it when ``StaticSpec.use_pallas`` is set (default: TPU backends).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: candidate rows per grid step (one VMEM tile is block_rows x n)
+BLOCK_ROWS = 512
+
+
+def _segred_kernel(vals_ref, pid_ref, out_ref, *, n: int, op: str):
+    vals = vals_ref[...]
+    pid = pid_ref[...]
+    ident = -jnp.inf if op == "max" else 0.0
+    for p in range(n):                       # n is static and small
+        masked = jnp.where(pid == p, vals, ident)
+        red = jnp.max(masked, axis=1) if op == "max" \
+            else jnp.sum(masked, axis=1)
+        out_ref[:, p] = red
+
+
+def segmented_reduce(vals: jax.Array, pid: jax.Array, op: str,
+                     interpret: bool = False) -> jax.Array:
+    """[N, n] vals + [N, n] monotone segment ids -> [N, n] per-segment
+    reduction; segments >= nparts get the identity (-inf for max, 0 for
+    sum), matching the numpy engine's seg_max/seg_sum conventions."""
+    if op not in ("max", "sum"):
+        raise ValueError(f"op must be 'max' or 'sum', got {op!r}")
+    N, n = vals.shape
+    block = min(BLOCK_ROWS, N)
+    pad = (-N) % block
+    if pad:
+        vals = jnp.pad(vals, ((0, pad), (0, 0)))
+        pid = jnp.pad(pid, ((0, pad), (0, 0)))
+    kernel = functools.partial(_segred_kernel, n=n, op=op)
+    spec = pl.BlockSpec((block, n), lambda r: (r, 0))
+    out = pl.pallas_call(
+        kernel,
+        grid=((N + pad) // block,),
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((N + pad, n), vals.dtype),
+        interpret=interpret,
+    )(vals, pid.astype(jnp.int32))
+    return out[:N]

@@ -1,0 +1,612 @@
+"""On-device candidate construction: brute-force chunks + multi-chain SA.
+
+Enumeration throughput dies the moment candidate *construction* round-trips
+to Python, so both search loops build their candidates on device:
+
+  brute force   a mixed-radix digit decode. The host reduces the (possibly
+                > 2^63-point) global enumeration index to one small int32
+                descriptor per decision slot per chunk; the device expands
+                it to per-candidate digits, gathers the clamp tables,
+                applies the backend's constraint propagation and evaluates
+                — one fused XLA program per chunk. The enumeration order is
+                IDENTICAL to the numpy/scalar engines, so the optimum and
+                the improvement history match them exactly.
+
+  annealing     a ``jax.random``-driven multi-chain sweep on ``lax.scan``:
+                each sweep proposes one move per chain (cut add/remove/move
+                or a joint fold-triple redraw scattered over the backend's
+                tying scope), evaluates all chains in one batch, applies
+                the Eq. 11 Metropolis rule per chain on a geometric
+                temperature ladder, and tracks per-chain incumbents on
+                device. Deterministic for a fixed seed. Unlike the host
+                parallel-tempering engine there are no replica exchanges
+                and fold moves always redraw the whole triple — this is a
+                different (device-shaped) explorer, not a bit-identical
+                port.
+
+``propagate_jax`` is the dynamic-cut port of ``Backend.propagate``: scope
+anchors are recomputed from the cut bitmask per candidate, so the same
+traced program serves any partitioning.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.accel.eval_jax import JaxEvaluator, _eval_core
+from repro.core.accel.lowering import DeviceArrays, StaticSpec
+from repro.core.hdgraph import Variables
+from repro.core.optimizers.common import OptimResult
+
+VARS = ("s_in", "s_out", "kern")
+_DIMS = {"s_in": "rows", "s_out": "col_div", "kern": "batch"}
+
+
+def _pow2ceil(x: int) -> int:
+    p = 1
+    while p < x:
+        p *= 2
+    return p
+
+
+# ----------------------------------------------------------------------
+# dynamic-cut constraint propagation (Backend.propagate on device)
+# ----------------------------------------------------------------------
+
+def propagate_jax(static: StaticSpec, A: DeviceArrays, si, so, kk, cb,
+                  single_partition: bool = False):
+    """Port of ``Backend.propagate`` for per-candidate cut bitmasks.
+
+    Anchors (scan-group first member, partition first node, partition first
+    non-internal node) are gathered from the pre-mutation arrays, matching
+    the host's copy-then-assign order. ``single_partition`` promises cb is
+    all-False at trace time, collapsing every anchor to a static index.
+    """
+    n = static.n_nodes
+    C = si.shape[0]
+    idt = A.batch.dtype
+    one = jnp.ones((), idt)
+    if not single_partition:
+        pid = jnp.concatenate(
+            [jnp.zeros((C, 1), idt), jnp.cumsum(cb.astype(idt), axis=1)],
+            axis=1)
+
+    if static.scan_tying:
+        # harmonise scan-group folds within each partition: for member a the
+        # anchor is the first member b with pid[b] == pid[a] (pid is monotone
+        # and members ascend, so that b is the group's first member in a's
+        # partition).
+        for members in static.scan_groups:
+            m = np.asarray(members)
+            if single_partition:
+                si = si.at[:, m].set(si[:, m[0]][:, None])
+                so = so.at[:, m].set(so[:, m[0]][:, None])
+                kk = kk.at[:, m].set(kk[:, m[0]][:, None])
+                continue
+            pid_m = pid[:, m]
+            eq = pid_m[:, :, None] == pid_m[:, None, :]
+            anchor = jnp.argmax(eq, axis=2)
+            si = si.at[:, m].set(jnp.take_along_axis(si[:, m], anchor, 1))
+            so = so.at[:, m].set(jnp.take_along_axis(so[:, m], anchor, 1))
+            kk = kk.at[:, m].set(jnp.take_along_axis(kk[:, m], anchor, 1))
+
+    if static.intra_matching:
+        so = jnp.where(A.elementwise[None, :], si, so)
+
+    if static.inter_matching:
+        iota = jnp.arange(n, dtype=idt)
+        if single_partition:
+            anchor_k = kk[:, 0][:, None]
+            # i_int holds exactly the internal-rows node indices, so the
+            # partition's first non-internal node is a static index
+            non_int = [j for j in range(n) if j not in static.i_int]
+            anchor_si = si[:, non_int[0]][:, None] if non_int \
+                else jnp.ones((C, 1), idt)
+        else:
+            is_start = jnp.concatenate([jnp.ones((C, 1), bool), cb], axis=1)
+            start_idx = jax.lax.cummax(
+                jnp.where(is_start, iota[None, :], 0), axis=1)
+            anchor_k = jnp.take_along_axis(kk, start_idx, 1)
+            # first non-internal node of each partition (may be after j):
+            # dense per-partition min of (j | internal -> n), gathered back
+            f = jnp.broadcast_to(jnp.where(A.internal, n, iota)[None, :],
+                                 (C, n))
+            onehot = pid[:, :, None] == iota[None, None, :]
+            segmin = jnp.min(jnp.where(onehot, f[:, :, None], n), axis=1)
+            anchor_ni = jnp.take_along_axis(segmin, pid, 1)
+            anchor_si = jnp.where(
+                anchor_ni < n,
+                jnp.take_along_axis(si, jnp.minimum(anchor_ni, n - 1), 1),
+                one)
+        kk = jnp.where(A.batch % anchor_k == 0, anchor_k, one)
+        si_new = jnp.where(A.rows % anchor_si == 0, anchor_si, one)
+        si = jnp.where(A.internal[None, :], si, si_new)
+        if static.intra_matching:
+            so = jnp.where(A.elementwise[None, :], si, so)
+    return si, so, kk
+
+
+# ----------------------------------------------------------------------
+# brute force: mixed-radix decode + evaluate, one XLA program per chunk
+# ----------------------------------------------------------------------
+
+def _construction_tables(graph, backend, slots, scopes, tabs_py, menus,
+                         cuts, base, max_menu, idt):
+    """Fold the scatter + ``Backend.propagate`` composition for one fixed
+    cut set into per-(var, node) value tables.
+
+    After ``set_fold``'s scatter, propagation rewrites every node from a
+    single source: scan tying copies the group's first member in the
+    node's partition; inter matching reads the partition's first node
+    (kern) / first non-internal node (s_in); intra copies s_in into s_out
+    on elementwise nodes. Each source is one node whose scattered value is
+    a function of exactly ONE slot's digit — so the final value at
+    (var, j) is ``T[var][j][digit of slot sigma[var][j]]``, with a
+    sentinel slot index S whose digit is always 0 for constants. The
+    device construction then needs one gather per variable and no
+    propagation at all.
+    """
+    n = len(graph.nodes)
+    S = len(slots)
+    base_vals = {"s_in": base.s_in, "s_out": base.s_out, "kern": base.kern}
+    sigma0 = {var: np.full(n, -1, np.int64) for var in VARS}
+    for s, (_, var) in enumerate(slots):
+        for j in scopes[s]:
+            sigma0[var][j] = s
+
+    def value0(var, m):
+        """(slot or -1, value-over-digit array) as scattered at node m."""
+        s = int(sigma0[var][m])
+        if s < 0:
+            return -1, np.full(max_menu, base_vals[var][m], np.int64)
+        tab = tabs_py[s][m]                 # clamped menu values at node m
+        out = np.full(max_menu, tab[-1], np.int64)   # padding never hit
+        out[:len(tab)] = tab
+        return s, out
+
+    bounds = [0] + [c + 1 for c in sorted(cuts)] + [n]
+    part_start = np.zeros(n, np.int64)
+    part_ni = np.full(n, -1, np.int64)      # first non-internal in partition
+    anchor = np.arange(n)                   # scan-tying source node
+    for b in range(len(bounds) - 1):
+        first = {}
+        ni = -1
+        for j in range(bounds[b], bounds[b + 1]):
+            if ni < 0 and not graph.nodes[j].internal_rows:
+                ni = j
+        for j in range(bounds[b], bounds[b + 1]):
+            part_start[j] = bounds[b]
+            part_ni[j] = ni
+            g = graph.nodes[j].scan_group
+            if backend.scan_tying and g >= 0:
+                if g not in first:
+                    first[g] = j
+                anchor[j] = first[g]
+
+    sigma = np.full((3, n), S, idt)
+    T = np.ones((3, n, max_menu), idt)
+
+    def assign(vi, j, src_slot, vals):
+        if src_slot < 0:
+            T[vi, j, :] = vals[0]           # constant: sentinel digit 0
+        else:
+            sigma[vi, j] = src_slot
+            T[vi, j, :] = vals
+
+    for j in range(n):
+        node = graph.nodes[j]
+        # ---- kern: inter anchors at the partition's first node ----------
+        if backend.inter_matching:
+            src = int(anchor[part_start[j]])
+            s_src, vals = value0("kern", src)
+            vals = np.where(node.batch % np.maximum(vals, 1) == 0, vals, 1)
+        else:
+            src = int(anchor[j])
+            s_src, vals = value0("kern", src)
+        assign(2, j, s_src, vals)
+        # ---- s_in: inter anchors at the first non-internal node ---------
+        if backend.inter_matching and not node.internal_rows:
+            ni = int(part_ni[j])
+            if ni < 0:
+                s_src, vals = -1, np.ones(max_menu, np.int64)
+            else:
+                s_src, vals = value0("s_in", int(anchor[ni]))
+            vals = np.where(node.rows % np.maximum(vals, 1) == 0, vals, 1)
+        else:
+            s_src, vals = value0("s_in", int(anchor[j]))
+        assign(0, j, s_src, vals)
+        si_slot, si_vals = (sigma[0, j], T[0, j].copy())
+        # ---- s_out: intra copies the final s_in on elementwise nodes ----
+        if backend.intra_matching and node.elementwise:
+            sigma[1, j] = si_slot
+            T[1, j, :] = si_vals
+        else:
+            s_src, vals = value0("s_out", int(anchor[j]))
+            assign(1, j, s_src, vals)
+    return sigma, T
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2))
+def _bf_chunk(static: StaticSpec, B: int, no_cut: bool,
+              A: DeviceArrays, desc, sigma, T, cb_row, take):
+    """Decode + evaluate one enumeration chunk of B candidates on device.
+
+    ``desc[s] = (kind, a, b, size)``: for a slow slot (stride >= chunk) the
+    digit is ``(a + (off >= b)) % size`` (one carry inside the chunk, at
+    offset ``b``); for a fast slot it is ``((a + off) // b) % size``. The
+    host reduced the global index modulo stride/period BEFORE building the
+    descriptor, so everything here fits 32 bits even for > 2^63 spaces.
+    Construction is three gathers through the precomputed propagation
+    tables (see ``_construction_tables``); no on-device propagation.
+    """
+    n = static.n_nodes
+    idt = A.batch.dtype
+    off = jnp.arange(B, dtype=idt)
+    kind, a, b, size = desc[:, 0:1], desc[:, 1:2], desc[:, 2:3], desc[:, 3:4]
+    digit_slow = (a + (off[None, :] >= b).astype(idt)) % size
+    digit_fast = ((a + off[None, :]) // jnp.maximum(b, 1)) % size
+    digits = jnp.where(kind == 1, digit_fast, digit_slow)      # [S, B]
+    digits = jnp.concatenate(
+        [digits, jnp.zeros((1, B), idt)], axis=0)              # sentinel
+    iota_n = jnp.arange(n, dtype=idt)
+    si = T[0][iota_n[:, None], digits[sigma[0]]].T             # [B, n]
+    so = T[1][iota_n[:, None], digits[sigma[1]]].T
+    kk = T[2][iota_n[:, None], digits[sigma[2]]].T
+    cb = jnp.broadcast_to(cb_row[None, :], (B, max(n - 1, 0)))
+    res = _eval_core(static, A, si, so, kk, cb, single_partition=no_cut)
+    objs = jnp.where(res["feasible"] & (off < take), res["objective"],
+                     jnp.inf)
+    r = jnp.argmin(objs)
+    return objs, si[r], so[r], kk[r]
+
+
+def brute_force_jax(problem, include_cuts: bool, max_cuts: int,
+                    max_points: Optional[int], time_budget_s: Optional[float],
+                    batch_size: int) -> OptimResult:
+    """The jax engine behind ``optimizers.brute_force(engine="jax")``.
+
+    Same enumeration order (hence identical optimum and history) as the
+    numpy engine; candidate construction and evaluation run on device. Each
+    cut set is enumerated in fixed-size padded chunks so the XLA program
+    compiles once per problem family.
+    """
+    from repro.core.optimizers.brute_force import (
+        _clamp_tables,
+        _cut_sets,
+        _slot_scopes,
+    )
+
+    graph, backend = problem.graph, problem.backend
+    slots, menus = backend.space(graph, problem.platform)
+    sizes = [len(m) for m in menus]
+    strides = [1] * len(slots)                    # itertools.product order:
+    for s in range(len(slots) - 2, -1, -1):       # last slot varies fastest
+        strides[s] = strides[s + 1] * sizes[s + 1]
+    total = 1
+    for s in sizes:
+        total *= s
+    max_menu = max(sizes, default=1)
+    n = len(graph.nodes)
+
+    jev = JaxEvaluator.from_problem(problem)
+    static, A = jev.static, jev.arrays
+    idt = np.int64 if A.batch.dtype == jnp.int64 else np.int32
+    B = min(batch_size, _pow2ceil(total))
+
+    base = backend.initial(graph).with_cuts(())
+
+    best_v: Optional[Variables] = None
+    best_obj = np.inf
+    points = 0
+    history: List[Tuple[int, float]] = []
+    start = time.perf_counter()
+    stop = False
+
+    for cuts in _cut_sets(graph.cut_edges, include_cuts, max_cuts):
+        if stop:
+            break
+        scopes = _slot_scopes(backend, graph, slots, cuts)
+        tabs_py = _clamp_tables(graph, slots, scopes, menus)
+        sigma, T = _construction_tables(graph, backend, slots, scopes,
+                                        tabs_py, menus, cuts, base,
+                                        max_menu, idt)
+        sigma_d = jnp.asarray(sigma)
+        T_d = jnp.asarray(T)
+        cb_row = np.zeros(max(n - 1, 0), bool)
+        for c in cuts:
+            cb_row[c] = True
+        cb_row_d = jnp.asarray(cb_row)
+
+        produced = 0
+        while produced < total:
+            take = min(B, total - produced)
+            if max_points is not None:
+                take = min(take, max_points - points)
+            if take <= 0:
+                stop = True
+                break
+            desc = np.zeros((len(slots), 4), idt)
+            for s in range(len(slots)):
+                stride, size = strides[s], sizes[s]
+                if stride >= take:
+                    # slow slot: at most one digit boundary inside the chunk
+                    q, r = divmod(produced, stride)
+                    desc[s] = (0, q % size, min(stride - r, take + 1), size)
+                else:
+                    # fast slot: the digit is periodic with period
+                    # stride*size (small, since stride < take <= B)
+                    desc[s] = (1, produced % (stride * size), stride, size)
+            objs, bi_si, bi_so, bi_kk = _bf_chunk(
+                static, B, not cuts, A, jnp.asarray(desc),
+                sigma_d, T_d, cb_row_d, take)
+            objs = np.asarray(objs[:take], np.float64)
+            problem.note_batch_evals(take)
+            # exact scalar-engine history: every strict improvement over the
+            # running best, in enumeration order
+            prefix = np.minimum.accumulate(
+                np.concatenate(([best_obj], objs)))[:-1]
+            imp = np.nonzero(objs < prefix)[0]
+            for r in imp:
+                history.append((points + int(r) + 1, float(objs[r])))
+            if len(imp):
+                best_obj = float(objs[imp[-1]])
+                best_v = Variables(
+                    tuple(int(e) for e in np.nonzero(cb_row)[0]),
+                    tuple(int(x) for x in np.asarray(bi_si)),
+                    tuple(int(x) for x in np.asarray(bi_so)),
+                    tuple(int(x) for x in np.asarray(bi_kk)))
+            points += take
+            produced += take
+            if max_points is not None and points >= max_points:
+                stop = True
+                break
+            if time_budget_s is not None and \
+                    time.perf_counter() - start > time_budget_s:
+                stop = True
+                break
+
+    elapsed = time.perf_counter() - start
+    if best_v is None:                         # no feasible point found
+        best_v = backend.initial(graph)
+    best_eval = problem.evaluate(best_v)
+    return OptimResult(best_v, best_eval, points, elapsed, history,
+                       name="brute_force")
+
+
+# ----------------------------------------------------------------------
+# multi-chain simulated annealing, one lax.scan sweep loop on device
+# ----------------------------------------------------------------------
+
+class DeviceSA:
+    """Device-resident multi-chain SA: move tables + the jitted sweep loop.
+
+    One instance per Problem; ``run`` advances a chain-state pytree by
+    ``n_sweeps`` sweeps and is resumable (the host can interleave calls
+    with wall-clock budget checks). Incumbents are tracked per chain on
+    device and read back with ``best_variables``.
+    """
+
+    def __init__(self, problem):
+        self.problem = problem
+        self.jev = JaxEvaluator.from_problem(problem)
+        self.static, self.A = self.jev.static, self.jev.arrays
+        graph, backend, platform = \
+            problem.graph, problem.backend, problem.platform
+        n = len(graph.nodes)
+        idt = np.int64 if self.A.batch.dtype == jnp.int64 else np.int32
+
+        max_val = max(platform.fold_values())
+        menu_lists = {}
+        max_menu = 1
+        for vi, var in enumerate(VARS):
+            for j in range(n):
+                cands = backend.candidates(graph, j, var, platform)
+                menu_lists[(vi, j)] = cands
+                max_menu = max(max_menu, len(cands))
+        menus = np.ones((3, n, max_menu), idt)
+        menu_sizes = np.ones((3, n), idt)
+        for (vi, j), cands in menu_lists.items():
+            menus[vi, j, :len(cands)] = cands
+            menu_sizes[vi, j] = len(cands)
+        # clamp[var, node, v] = set_fold's divisor walk-down of value v
+        clamp = np.ones((3, n, max_val + 1), idt)
+        for vi, var in enumerate(VARS):
+            for j in range(n):
+                dim = getattr(graph.nodes[j], _DIMS[var])
+                for v in range(max_val + 1):
+                    val = v
+                    while val > 1 and dim % val != 0:
+                        val -= 1
+                    clamp[vi, j, v] = val
+        self.menus = jnp.asarray(menus)
+        self.menu_sizes = jnp.asarray(menu_sizes)
+        self.clamp = jnp.asarray(clamp)
+        self.gran = tuple(backend.granularity[var] for var in VARS)
+        self.has_cut_edges = bool(len(graph.cut_edges) > 0)
+
+    # ------------------------------------------------------------------
+    def init_state(self, v0: Variables, ev0, chains: int, seed: int):
+        n = self.static.n_nodes
+        idt = self.A.batch.dtype
+        si = jnp.broadcast_to(
+            jnp.asarray(np.array(v0.s_in), idt)[None, :], (chains, n))
+        so = jnp.broadcast_to(
+            jnp.asarray(np.array(v0.s_out), idt)[None, :], (chains, n))
+        kk = jnp.broadcast_to(
+            jnp.asarray(np.array(v0.kern), idt)[None, :], (chains, n))
+        cb_row = np.zeros(max(n - 1, 0), bool)
+        for c in v0.cuts:
+            cb_row[c] = True
+        cb = jnp.broadcast_to(jnp.asarray(cb_row)[None, :],
+                              (chains, max(n - 1, 0)))
+        obj = jnp.full((chains,), float(ev0.objective))
+        feas = jnp.full((chains,), bool(ev0.feasible))
+        return {
+            "si": si, "so": so, "kk": kk, "cb": cb,
+            "obj": obj, "feas": feas,
+            "best_si": si, "best_so": so, "best_kk": kk, "best_cb": cb,
+            "best_obj": obj, "best_feas": feas,
+            "key": jax.random.PRNGKey(seed),
+        }
+
+    def run(self, state, temps, scale: float, cooling: float, k_min: float,
+            n_sweeps: int):
+        return _sa_sweeps(self.static, self.gran, self.has_cut_edges,
+                          n_sweeps, self.A, self.menus, self.menu_sizes,
+                          self.clamp, state, temps, scale, cooling, k_min)
+
+    # ------------------------------------------------------------------
+    def best_variables(self, state):
+        """Per-chain incumbents as host ``Variables`` + (objective, feasible)."""
+        si = np.asarray(state["best_si"])
+        so = np.asarray(state["best_so"])
+        kk = np.asarray(state["best_kk"])
+        cb = np.asarray(state["best_cb"])
+        objs = np.asarray(state["best_obj"], np.float64)
+        feas = np.asarray(state["best_feas"], bool)
+        out = []
+        for c in range(si.shape[0]):
+            cuts = tuple(int(e) for e in np.nonzero(cb[c])[0])
+            out.append((Variables(cuts, tuple(int(x) for x in si[c]),
+                                  tuple(int(x) for x in so[c]),
+                                  tuple(int(x) for x in kk[c])),
+                        float(objs[c]), bool(feas[c])))
+        return out
+
+
+def _masked_choice(key, mask):
+    """Uniform index among True entries per row (argmax of masked iid
+    uniforms); rows with an empty mask return 0 — callers gate on count."""
+    g = jax.random.uniform(key, mask.shape)
+    return jnp.argmax(jnp.where(mask, g, -1.0), axis=1)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3))
+def _sa_sweeps(static: StaticSpec, gran: Tuple[str, str, str],
+               has_cut_edges: bool, n_sweeps: int,
+               A: DeviceArrays, menus, menu_sizes, clamp,
+               state, temps, scale, cooling, k_min):
+    """Advance all chains by ``n_sweeps``; returns (state, temps, traces)."""
+    n = static.n_nodes
+    idt = A.batch.dtype
+    iota_n = jnp.arange(n, dtype=idt)
+
+    def sweep(carry, _):
+        st, temps = carry
+        key, kt, kc1, kc2, kc3, kn, km, kacc = \
+            jax.random.split(st["key"], 8)
+        si, so, kk, cb = st["si"], st["so"], st["kk"], st["cb"]
+        C = si.shape[0]
+
+        # ---------------- cut proposal --------------------------------
+        if has_cut_edges:
+            removable = cb
+            addable = A.cut_allowed[None, :] & ~cb
+            n_rem = removable.sum(axis=1)
+            n_add = addable.sum(axis=1)
+            r2 = jax.random.uniform(kc1, (C,))
+            do_rem = (r2 < 0.45) & (n_rem > 0)
+            do_add = ~do_rem & (r2 < 0.9) & (n_add > 0)
+            do_move = ~do_rem & ~do_add & (n_rem > 0) & (n_add > 0)
+            rem_i = _masked_choice(kc2, removable)
+            add_i = _masked_choice(kc3, addable)
+            E = cb.shape[1]
+            oh_rem = jnp.arange(E)[None, :] == rem_i[:, None]
+            oh_add = jnp.arange(E)[None, :] == add_i[:, None]
+            cb_cut = cb & ~(oh_rem & (do_rem | do_move)[:, None])
+            cb_cut = cb_cut | (oh_add & (do_add | do_move)[:, None])
+        else:
+            cb_cut = cb
+
+        # ---------------- fold proposal (joint triple redraw) ---------
+        i = jax.random.randint(kn, (C,), 0, n)
+        draws = jax.random.randint(km, (8, 3, C), 0, 1 << 30)
+        sizes_i = menu_sizes[:, i]                       # [3, C]
+        mi = draws % sizes_i[None, :, :]                 # [8, 3, C]
+        vals = menus[jnp.arange(3)[None, :, None],
+                     i[None, None, :], mi]               # [8, 3, C]
+        lut, cap = A.val_lut, static.val_cap
+        iv = lut[jnp.minimum(vals, cap)]
+        known = (iv >= 0).all(axis=1)
+        ok = known & A.real_table[jnp.maximum(iv[:, 0], 0),
+                                  jnp.maximum(iv[:, 1], 0),
+                                  jnp.maximum(iv[:, 2], 0)]
+        sel = jnp.where(ok.any(axis=0), jnp.argmax(ok, axis=0), 7)
+        v3 = jnp.take_along_axis(vals, sel[None, None, :], 0)[0]   # [3, C]
+
+        pid = jnp.concatenate(
+            [jnp.zeros((C, 1), idt), jnp.cumsum(cb.astype(idt), axis=1)],
+            axis=1)
+        pid_i = jnp.take_along_axis(pid, i[:, None], 1)
+        same_part = pid == pid_i
+        sg_i = A.scan_group[i]
+        oh_i = iota_n[None, :] == i[:, None]
+        fold = {"s_in": si, "s_out": so, "kern": kk}
+        for vi, var in enumerate(VARS):
+            g = gran[vi]
+            if g == "global":
+                m = same_part
+            elif g == "group":
+                m = jnp.where(sg_i[:, None] >= 0,
+                              same_part
+                              & (A.scan_group[None, :] == sg_i[:, None]),
+                              oh_i)
+            else:
+                m = oh_i
+            if var == "s_in" and g == "global":
+                m = m & ~A.internal[None, :]     # decode split-KV keeps s_I
+            clamped = clamp[vi][iota_n[None, :], v3[vi][:, None]]
+            fold[var] = jnp.where(m, clamped, fold[var])
+        p_si, p_so, p_kk = propagate_jax(static, A, fold["s_in"],
+                                         fold["s_out"], fold["kern"], cb)
+
+        # ---------------- select + evaluate ---------------------------
+        r_type = jax.random.uniform(kt, (C,))
+        is_cut = (r_type < 0.25) if has_cut_edges \
+            else jnp.zeros((C,), bool)
+        p_si = jnp.where(is_cut[:, None], si, p_si)
+        p_so = jnp.where(is_cut[:, None], so, p_so)
+        p_kk = jnp.where(is_cut[:, None], kk, p_kk)
+        p_cb = jnp.where(is_cut[:, None], cb_cut, cb)
+        res = _eval_core(static, A, p_si, p_so, p_kk, p_cb)
+        p_obj = res["objective"].astype(st["obj"].dtype)
+        p_feas = res["feasible"]
+
+        # ---------------- Metropolis (Eq. 11) -------------------------
+        u = jax.random.uniform(kacc, (C,))
+        delta = (st["obj"] - p_obj) / scale
+        psi = jnp.exp(jnp.minimum(0.0, delta / temps))
+        accept = p_feas & (psi >= u)
+        acc2 = accept[:, None]
+        st = dict(st)
+        st["si"] = jnp.where(acc2, p_si, si)
+        st["so"] = jnp.where(acc2, p_so, so)
+        st["kk"] = jnp.where(acc2, p_kk, kk)
+        st["cb"] = jnp.where(acc2, p_cb, cb)
+        st["obj"] = jnp.where(accept, p_obj, st["obj"])
+        st["feas"] = jnp.where(accept, p_feas, st["feas"])
+
+        # incumbents consider every proposal, accepted or not (a feasible
+        # evaluation always beats an infeasible incumbent)
+        better = (p_feas & ~st["best_feas"]) \
+            | ((p_feas == st["best_feas"]) & (p_obj < st["best_obj"]))
+        b2 = better[:, None]
+        st["best_si"] = jnp.where(b2, p_si, st["best_si"])
+        st["best_so"] = jnp.where(b2, p_so, st["best_so"])
+        st["best_kk"] = jnp.where(b2, p_kk, st["best_kk"])
+        st["best_cb"] = jnp.where(b2, p_cb, st["best_cb"])
+        st["best_obj"] = jnp.where(better, p_obj, st["best_obj"])
+        st["best_feas"] = st["best_feas"] | p_feas
+        st["key"] = key
+        temps = jnp.maximum(k_min, temps * cooling)   # lockstep ladder cool
+        return (st, temps), (st["best_obj"], st["best_feas"])
+
+    (state, temps), traces = jax.lax.scan(
+        sweep, (state, temps), None, length=n_sweeps)
+    return state, temps, traces

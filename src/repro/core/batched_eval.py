@@ -53,6 +53,7 @@ class BatchResult:
     reconf_time: np.ndarray        # [N] |C| * t_conf
     node_resident: np.ndarray      # [N, nodes] per-chip Eq. 6 residency
     node_times: np.ndarray         # [N, nodes] roofline node latency
+    node_collective: np.ndarray = None  # [N, nodes] per-chip collective bytes
 
     def __len__(self) -> int:
         return int(self.objective.shape[0])
@@ -460,7 +461,8 @@ class BatchedEvaluator:
         return BatchResult(
             objective=obj, feasible=~bad, latency=latency,
             throughput=throughput, part_times=t_part, nparts=nparts,
-            reconf_time=reconf, node_resident=resident, node_times=node_time)
+            reconf_time=reconf, node_resident=resident, node_times=node_time,
+            node_collective=coll)
 
     # ------------------------------------------------------------------
     def _collective_bytes(self, si, so, kk, sif, sof, kkf, b_in

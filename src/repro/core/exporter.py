@@ -22,11 +22,30 @@ Param-sharding roles (shared vocabulary with models/*):
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.hdgraph import HDGraph, Variables, partitions_from_cuts
 from repro.core.platform import Platform
+
+
+@functools.lru_cache(maxsize=1)
+def _pspec():
+    """Lazy cached ``jax.sharding.PartitionSpec`` constructor.
+
+    Keeps ``core`` importable (and every pure-analysis path runnable)
+    without jax; only the spec-emitting methods below need it, and they
+    raise one clear error naming the missing extra instead of an
+    ImportError mid-export."""
+    try:
+        from jax.sharding import PartitionSpec
+    except ImportError as e:                      # pragma: no cover - no-jax env
+        raise ImportError(
+            "emitting PartitionSpecs requires jax, which is not installed. "
+            "Install the 'jax' extra (pip install jax); the rest of "
+            "repro.core works without it.") from e
+    return PartitionSpec
 
 
 @dataclass(frozen=True)
@@ -76,14 +95,14 @@ class ShardingPlan:
 
     def data_spec(self, partition: int = 0):
         """PartitionSpec for (batch, seq) token inputs."""
-        from jax.sharding import PartitionSpec as P
+        P = _pspec()
         kp = self._boundary_kind(partition)
         return P(_axes(kp.batch_axes), _axes(kp.rows_axes))
 
     def act_spec(self, partition: int = 0):
         """PartitionSpec for (batch, seq, d_model) activations. Decode
         activations are one token wide — their rows dim cannot shard."""
-        from jax.sharding import PartitionSpec as P
+        P = _pspec()
         kp = self._boundary_kind(partition)
         rows = None if self.mode == "decode" else _axes(kp.rows_axes)
         return P(_axes(kp.batch_axes), rows, None)
@@ -103,7 +122,7 @@ class ShardingPlan:
     def spec_for_role(self, role: str, ndim: int, kind: str,
                       partition: int = 0, stacked: int = 0):
         """PartitionSpec for a parameter with `stacked` leading scan dims."""
-        from jax.sharding import PartitionSpec as P
+        P = _pspec()
         kp = self.kind_plan(kind, partition)
         cols = _axes(kp.cols_axes)
         lead = [None] * stacked
@@ -126,7 +145,7 @@ class ShardingPlan:
         """(batch, kv_len, kv_heads, head_dim) cache spec: batch over k axes,
         length over rows axes (split-KV), heads over cols axes (up to the
         GQA limit — legalisation already clamped)."""
-        from jax.sharding import PartitionSpec as P
+        P = _pspec()
         kp = self.kind_plan("attn", partition)
         return P(_axes(kp.batch_axes), _axes(kp.rows_axes),
                  _axes(kp.cols_axes), None)

@@ -18,6 +18,16 @@ Two modes:
       ladder stepped in lockstep, ONE batched evaluate per sweep
       (core/batched_eval.py), with periodic Metropolis replica exchanges
       between adjacent temperatures. Deterministic under a fixed seed.
+
+Engines (core/accel registry): the two modes above run on the ``host``
+engines (scalar / numpy). ``engine="jax"`` instead runs the whole sweep
+loop on the accelerator (``core/accel/search_loops.DeviceSA``): move
+proposal, constraint propagation, evaluation, Metropolis acceptance and
+per-chain incumbent tracking are one ``lax.scan`` program, driven by
+``jax.random`` — deterministic for a fixed seed, but a different rng
+stream than the host engines (it is a device-shaped explorer, not a
+bit-identical port; there are no replica exchanges and fold moves always
+redraw the whole triple).
 """
 from __future__ import annotations
 
@@ -43,7 +53,15 @@ def optimise(problem: Problem,
              max_iters: Optional[int] = None,
              objective_scale: Optional[float] = None,
              chains: int = 1,
-             swap_interval: int = 16) -> OptimResult:
+             swap_interval: int = 16,
+             engine: str = "host") -> OptimResult:
+    if engine not in ("host", "scalar", "numpy", "batched"):
+        from repro.core.accel import resolve_engine
+        engine = resolve_engine(engine, allow_fallback=False)
+    if engine == "jax":
+        return _optimise_jax(problem, seed, k_start, k_min, cooling,
+                             time_budget_s, max_iters, objective_scale,
+                             max(chains, 1))
     if chains <= 1:
         return _optimise_single(problem, seed, k_start, k_min, cooling,
                                 time_budget_s, max_iters, objective_scale)
@@ -188,3 +206,77 @@ def _optimise_tempering(problem, seed, k_start, k_min, cooling,
     best_eval = problem.evaluate(best_v)
     return OptimResult(best_v, best_eval, it, elapsed, history,
                        name=f"annealing-pt{chains}")
+
+
+# ----------------------------------------------------------------------
+# accelerator-resident multi-chain SA (engine="jax")
+# ----------------------------------------------------------------------
+
+def _optimise_jax(problem, seed, k_start, k_min, cooling, time_budget_s,
+                  max_iters, objective_scale, chains) -> OptimResult:
+    import numpy as np
+
+    from repro.core.accel.search_loops import DeviceSA
+    from repro.core.optimizers.common import incumbent_better
+
+    sa = DeviceSA(problem)
+    import jax.numpy as jnp
+
+    v0 = repair(problem, problem.backend.initial(problem.graph))
+    ev0 = problem.evaluate(v0)
+    scale = _scale_for(ev0, objective_scale)
+    temps = jnp.asarray([k_start * (LADDER_SPREAD ** c)
+                         for c in range(chains)])
+    state = sa.init_state(v0, ev0, chains, seed)
+    history = [(0, ev0.objective)]
+
+    if max_iters is not None:
+        total_sweeps = max(1, -(-max_iters // chains))
+    else:
+        # cool the cold chain from k_start to k_min, like the host schedule
+        total_sweeps = max(1, math.ceil(math.log(k_min / k_start)
+                                        / math.log(cooling)))
+
+    start = time.perf_counter()
+    sweeps = 0
+    g_best, g_feas = ev0.objective, ev0.feasible
+    while True:
+        # max_iters always caps the sweep count; a time budget alone keeps
+        # running at the K_min floor until the clock expires (host contract)
+        if time_budget_s is not None and max_iters is None:
+            chunk = 128
+        else:
+            chunk = min(128, total_sweeps - sweeps)
+        if chunk <= 0:
+            break
+        state, temps, (t_obj, t_feas) = sa.run(state, temps, scale,
+                                               cooling, k_min, chunk)
+        t_obj = np.asarray(t_obj, np.float64)
+        t_feas = np.asarray(t_feas, bool)
+        for t in range(chunk):
+            # feasibility-aware best across chains after this sweep
+            row_f = t_feas[t]
+            if row_f.any():
+                c = int(np.argmin(np.where(row_f, t_obj[t], np.inf)))
+            else:
+                c = int(np.argmin(t_obj[t]))
+            if incumbent_better(bool(row_f[c]), float(t_obj[t, c]),
+                                g_feas, g_best):
+                g_best, g_feas = float(t_obj[t, c]), bool(row_f[c])
+                history.append(((sweeps + t + 1) * chains, g_best))
+        sweeps += chunk
+        if time_budget_s is not None:
+            if time.perf_counter() - start > time_budget_s:
+                break
+        elif sweeps >= total_sweeps:
+            break
+
+    elapsed = time.perf_counter() - start
+    best_v, best_obj, best_feas = None, np.inf, False
+    for v, o, f in sa.best_variables(state):
+        if best_v is None or incumbent_better(f, o, best_feas, best_obj):
+            best_v, best_obj, best_feas = v, o, f
+    best_eval = problem.evaluate(best_v)
+    problem.note_batch_evals(sweeps * chains)
+    return OptimResult(best_v, best_eval, sweeps * chains, elapsed, history,
+                       name=f"annealing-jax{chains}")

@@ -5,14 +5,20 @@ decision slots (and optionally cut sets), discards constraint violators, and
 keeps the best objective. Guarantees the optimum at enumeration cost — the
 Table-IV benchmark uses the measured points/s to extrapolate full-space time.
 
-Two engines:
-  batched (default) — the product space is enumerated in chunked batches
+Three engines (``core/accel`` registry; ``batched`` is a legacy alias for
+``numpy`` and ``auto`` picks ``jax`` when available):
+  numpy (default) — the product space is enumerated in chunked batches
       (``batch_size`` points per call) through the vectorised
       ``core/batched_eval.py`` array program. Candidate construction mirrors
       the scalar ``backend.set_fold`` + ``propagate`` semantics exactly
       (clamp tables + vectorised propagation), so the enumerated set — and
       hence the returned optimum and improvement history — is identical to
       the scalar engine's.
+  jax — accelerator-resident: candidate construction (mixed-radix digit
+      decode + propagation) AND evaluation run as one jitted XLA program
+      per chunk (``core/accel/search_loops.py``). Same enumeration order,
+      same optimum and history as the numpy engine (f32 rounding on the
+      recorded objective values unless jax x64 is enabled).
   scalar — the original one-point-at-a-time reference path, kept for
       equivalence tests and the Table-IV speedup baseline.
 """
@@ -36,13 +42,17 @@ def optimise(problem: Problem,
              max_cuts: int = 1,
              max_points: Optional[int] = None,
              time_budget_s: Optional[float] = None,
-             engine: str = "batched",
+             engine: str = "numpy",
              batch_size: int = 4096) -> OptimResult:
+    from repro.core.accel import resolve_engine
+    engine = resolve_engine(engine, allow_fallback=False)
     if engine == "scalar":
         return _optimise_scalar(problem, include_cuts, max_cuts, max_points,
                                 time_budget_s)
-    if engine != "batched":
-        raise ValueError(f"unknown engine {engine!r}")
+    if engine == "jax":
+        from repro.core.accel.search_loops import brute_force_jax
+        return brute_force_jax(problem, include_cuts, max_cuts, max_points,
+                               time_budget_s, batch_size)
     return _optimise_batched(problem, include_cuts, max_cuts, max_points,
                              time_budget_s, batch_size)
 

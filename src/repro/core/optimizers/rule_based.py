@@ -18,7 +18,7 @@ from typing import List, Optional, Tuple
 from repro.core.hdgraph import Variables, partitions_from_cuts
 from repro.core.objectives import Problem
 from repro.core.optimizers.common import OptimResult, repair
-from repro.core.perfmodel import eval_nodes, partition_time, t_conf
+from repro.core.perfmodel import partition_time, t_conf
 
 VARS = ("s_in", "s_out", "kern")
 
@@ -44,7 +44,8 @@ def _resource_vector(problem: Problem, v: Variables) -> Tuple[float, float]:
 
 
 def optimise_partition(problem: Problem, v: Variables, part: List[int],
-                       max_steps: int = 512) -> Tuple[Variables, int]:
+                       max_steps: int = 512,
+                       batch_probes: bool = True) -> Tuple[Variables, int]:
     """Algorithm 2, lines 1-8.
 
     Under the streaming model (Eq. 2: max over nodes) only the slowest node
@@ -57,7 +58,16 @@ def optimise_partition(problem: Problem, v: Variables, part: List[int],
     under streaming max-semantics the two coincide (the slowest node IS the
     interval); under spmd the partition time additionally carries the
     modelled resharding collectives at internal layout mismatches, so the
-    greedy prefers layout-compatible folds when node times tie."""
+    greedy prefers layout-compatible folds when node times tie.
+
+    ``batch_probes`` evaluates all of a step's candidate fold increments
+    for the slowest node as ONE ``BatchedEvaluator.evaluate_batch`` call
+    (plus the incumbent, so both sides of every comparison carry the same
+    rounding) instead of one scalar ``problem.evaluate`` per probe. The
+    greedy walks the identical move sequence — the decision quantities
+    (feasibility, partition time, collective-bytes/residency resource
+    vector) agree with the scalar path to 1e-9 and ties are broken in the
+    same probe order."""
     graph, backend, platform = problem.graph, problem.backend, problem.platform
     points = 0
     blocked: set = set()
@@ -84,9 +94,7 @@ def optimise_partition(problem: Problem, v: Variables, part: List[int],
             break
         ev_now = problem.evaluate(v)
         evals = ev_now.node_evals
-        t_part = part_cost(ev_now, v)
         j = max(candidates_left, key=lambda i: evals[i].time)
-        r_prev = _resource_vector(problem, v)
         best: Optional[Tuple[Tuple[float, float], Variables, float]] = None
 
         # Candidate moves for the slowest node. On FPGA, Algorithm 2 bumps
@@ -105,21 +113,52 @@ def optimise_partition(problem: Problem, v: Variables, part: List[int],
             for kk in menus["kern"]
             if (si, so, kk) != cur and platform.folds_realizable((si, so, kk))
         ]
+        cands = []
         for si, so, kk in triples:
             v2 = v
             for var, val in zip(VARS, (si, so, kk)):
                 v2 = backend.set_fold(graph, v2, j, var, val)
-            ev2 = problem.evaluate(v2)
-            points += 1
-            if not ev2.feasible:
-                continue
-            t_new = part_cost(ev2, v2)
-            if t_new >= t_part - 1e-15:
-                continue
-            r_new = _resource_vector(problem, v2)
-            dr = (r_new[0] - r_prev[0], r_new[1] - r_prev[1])
-            if best is None or dr < best[0]:
-                best = (dr, v2, t_new)
+            cands.append(v2)
+        if batch_probes and cands:
+            # one batched evaluate for the whole probe set, with the
+            # incumbent as row 0 so every comparison is batched-vs-batched
+            res = problem.evaluate_many([v] + cands)
+            points += len(cands)
+
+            def b_cost(r: int, vv: Variables) -> float:
+                t = float(res.part_times[r][pidx])
+                if pidx > 0:
+                    t += amort * t_conf(graph, part, vv, platform)
+                return t
+
+            t_part = b_cost(0, v)
+            r_prev = (float(res.node_collective[0].sum()),
+                      float(res.node_resident[0].sum()))
+            for r, v2 in enumerate(cands, start=1):
+                if not res.feasible[r]:
+                    continue
+                t_new = b_cost(r, v2)
+                if t_new >= t_part - 1e-15:
+                    continue
+                dr = (float(res.node_collective[r].sum()) - r_prev[0],
+                      float(res.node_resident[r].sum()) - r_prev[1])
+                if best is None or dr < best[0]:
+                    best = (dr, v2, t_new)
+        else:
+            t_part = part_cost(ev_now, v)
+            r_prev = _resource_vector(problem, v)
+            for v2 in cands:
+                ev2 = problem.evaluate(v2)
+                points += 1
+                if not ev2.feasible:
+                    continue
+                t_new = part_cost(ev2, v2)
+                if t_new >= t_part - 1e-15:
+                    continue
+                r_new = _resource_vector(problem, v2)
+                dr = (r_new[0] - r_prev[0], r_new[1] - r_prev[1])
+                if best is None or dr < best[0]:
+                    best = (dr, v2, t_new)
         if best is None:
             blocked.add(j)              # node out of resources / fully parallel
             continue
@@ -190,7 +229,16 @@ def _seeded_candidates(problem: Problem) -> List[Variables]:
 
 def optimise(problem: Problem,
              time_budget_s: Optional[float] = None,
-             multi_start: bool = True) -> OptimResult:
+             multi_start: bool = True,
+             engine: str = "numpy") -> OptimResult:
+    # ``engine`` selects how Algorithm 2's probes evaluate: "scalar" keeps
+    # the original one-evaluate-per-probe loop; everything else ("numpy",
+    # "auto", "jax") batches each greedy step's probe set through
+    # BatchedEvaluator.evaluate_batch. The probe batches are a few dozen
+    # points, far below jit break-even, so the jax engine intentionally
+    # shares the numpy probe path here.
+    from repro.core.accel import resolve_engine
+    batch_probes = resolve_engine(engine, allow_fallback=False) != "scalar"
     graph = problem.graph
     start = time.perf_counter()
     points = 0
@@ -200,7 +248,8 @@ def optimise(problem: Problem,
 
     # lines 10-12: optimise partitions independently
     for part in partitions_from_cuts(graph, v.cuts):
-        v, p = optimise_partition(problem, v, part)
+        v, p = optimise_partition(problem, v, part,
+                                  batch_probes=batch_probes)
         points += p
     history.append((points, problem.evaluate(v).objective))
 
@@ -214,7 +263,8 @@ def optimise(problem: Problem,
                 break
             sv = seed
             for part in partitions_from_cuts(graph, sv.cuts):
-                sv, p = optimise_partition(problem, sv, part)
+                sv, p = optimise_partition(problem, sv, part,
+                                           batch_probes=batch_probes)
                 points += p
             ev = problem.evaluate(sv)
             points += 1
@@ -267,7 +317,8 @@ def optimise(problem: Problem,
                 target = next(p for p in new_parts if part[0] in p)
                 v2 = problem.backend.propagate(graph, v2)
                 v2 = repair(problem, v2)
-                v2, p = optimise_partition(problem, v2, target)
+                v2, p = optimise_partition(problem, v2, target,
+                                           batch_probes=batch_probes)
                 points += p
                 ev2 = problem.evaluate(v2)
                 points += 1
@@ -304,7 +355,8 @@ def optimise(problem: Problem,
         if not removed:
             break
     for part in partitions_from_cuts(graph, v.cuts):
-        v, p = optimise_partition(problem, v, part)
+        v, p = optimise_partition(problem, v, part,
+                                  batch_probes=batch_probes)
         points += p
     history.append((points, problem.evaluate(v).objective))
 

@@ -4,6 +4,37 @@ This is the public API the launcher and examples call:
 
     plan = optimise_mapping(arch, shape, platform, backend="spmd",
                             optimiser="rule_based", objective="throughput")
+
+Engine selection
+----------------
+Every optimiser evaluates candidate designs through one of three engines
+(``core/accel`` registry); ``optimise_mapping(engine=...)`` threads the
+choice through. ``auto`` resolves to ``jax`` when jax is importable, else
+``numpy``; requesting ``jax`` explicitly without jax installed raises
+``core.accel.EngineUnavailable`` naming the missing extra.
+
+  engine   brute_force                annealing                rule_based
+  -------  -------------------------  -----------------------  -----------------
+  scalar   one evaluate per point     paper Algorithm 1        scalar probe loop
+           (reference; Table-IV       (chains=1 scalar loop;   (reference)
+           baseline)                  chains>1 numpy PT)
+  numpy    chunked batches through    chains>1: lockstep       each greedy step's
+           the vectorised host        parallel tempering, one  probe set as one
+           array program             batched evaluate/sweep    batched evaluate
+  jax      on-device mixed-radix      whole multi-chain sweep  numpy probe path
+           candidate decode + jitted  loop on device           (probe batches are
+           evaluate (identical        (lax.scan + jax.random;  far below jit
+           optimum & history to       per-chain incumbents;    break-even)
+           numpy)                     different rng than host)
+
+Platform notes: the jax engine jit-compiles per problem family and runs on
+whatever ``jax.default_backend()`` provides (CPU jit included; TPU/GPU when
+present — the partition-time segmented reduction can route through the
+Pallas kernel in ``core/accel/pallas_segred.py`` on TPU). Device arrays are
+float32 unless ``jax_enable_x64`` is on; the scalar/numpy engines are
+float64 throughout. All engines agree on feasibility and the returned
+design; returned ``Evaluation`` objects are always re-derived through the
+float64 scalar reference.
 """
 from __future__ import annotations
 
@@ -49,9 +80,15 @@ def optimise_mapping(arch: ArchConfig, shape: ShapeSpec,
                      objective: str = "throughput",
                      exec_model: str = "streaming",
                      opts: Optional[ModelOptions] = None,
+                     engine: Optional[str] = None,
                      **optimiser_kwargs) -> ShardingPlan:
+    """``engine`` selects the evaluation engine (see the module docstring
+    matrix); None keeps each optimiser's default. Remaining kwargs go to
+    the optimiser entry point."""
     problem = make_problem(arch, shape, platform, backend, objective,
                            exec_model, opts)
+    if engine is not None:
+        optimiser_kwargs["engine"] = engine
     result = OPTIMIZERS[optimiser](problem, **optimiser_kwargs)
     return export_plan(problem.graph, result.variables, platform,
                        exec_model, result.evaluation)

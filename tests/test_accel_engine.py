@@ -1,0 +1,298 @@
+"""Accelerator-resident search engine (core/accel/).
+
+Three-way engine agreement: the jitted jax array program must match the
+numpy engine AND the scalar reference on objective, feasibility, partition
+times and Eq. 6 residency across every example architecture, mode and
+backend.
+
+Precision contract (documented in core/accel/eval_jax.py): with jax's
+default float32 device arrays the jax engine agrees with the float64
+reference to ~1e-7 relative (we assert 1e-5 for headroom) and feasibility
+is exact — the binding constraints are integer-exact (divisibility, mesh
+realisability, matching) or sit far from their float thresholds on the
+example spaces. With float64 (``jax.config.update("jax_enable_x64",
+True)``, exercised here through the ``enable_x64`` context manager) the
+agreement tightens to the numpy engine's own 1e-9 contract.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_arch, reduced
+from repro.configs.base import ShapeSpec
+from repro.core.accel import (
+    ENGINES,
+    EngineUnavailable,
+    jax_available,
+    resolve_engine,
+)
+from repro.core.backends import BACKENDS
+from repro.core.graph_builder import build_hdgraph
+from repro.core.objectives import Problem
+from repro.core.optimizers import brute_force, simulated_annealing
+from repro.core.perfmodel import ModelOptions
+from repro.core.platform import Platform
+
+jax = pytest.importorskip("jax")
+
+from repro.core.accel.eval_jax import JaxEvaluator  # noqa: E402
+
+PLAT = Platform(name="t-4x4", mesh_axes=(("data", 4), ("model", 4)))
+TRAIN = ShapeSpec("train_tiny", 256, 16, "train")
+PREFILL = ShapeSpec("prefill_tiny", 256, 16, "prefill")
+DECODE = ShapeSpec("decode_tiny", 256, 16, "decode")
+
+#: float32-on-device agreement vs the float64 scalar reference
+F32_RTOL = 1e-5
+
+EXAMPLE_ARCHS = sorted(ARCHS)
+
+
+def _problem(arch_name, shape, backend="spmd", objective="throughput",
+             exec_model="streaming", **opts) -> Problem:
+    arch = reduced(get_arch(arch_name))
+    graph = build_hdgraph(arch, shape)
+    return Problem(graph=graph, platform=PLAT, backend=BACKENDS[backend],
+                   objective=objective, exec_model=exec_model,
+                   opts=ModelOptions(**opts))
+
+
+def _random_designs(prob: Problem, n: int, seed: int = 0):
+    import random
+    rng = random.Random(seed)
+    v = prob.backend.initial(prob.graph)
+    out = []
+    for _ in range(n):
+        v = prob.backend.random_move(rng, prob.graph, v, prob.platform)
+        out.append(v)
+    return out
+
+
+def _assert_three_way(prob: Problem, designs, rtol=F32_RTOL, atol=1e-12):
+    """jax == numpy == scalar on the full result surface."""
+    bev = prob.batched()
+    jev = JaxEvaluator.from_problem(prob)
+    packed = bev.pack(designs)
+    rn = bev.evaluate_batch(*packed)
+    rj = jev.evaluate_batch(*packed)
+    # jax vs numpy (whole batch at once)
+    np.testing.assert_array_equal(rj.feasible, rn.feasible)
+    np.testing.assert_allclose(rj.objective, rn.objective,
+                               rtol=rtol, atol=atol)
+    np.testing.assert_allclose(rj.part_times, rn.part_times,
+                               rtol=rtol, atol=atol)
+    np.testing.assert_allclose(rj.node_resident, rn.node_resident,
+                               rtol=rtol)
+    np.testing.assert_allclose(rj.node_collective, rn.node_collective,
+                               rtol=rtol, atol=1e-6)
+    # jax vs the scalar reference, design by design
+    for r, v in enumerate(designs):
+        ev = prob.evaluate(v)
+        assert ev.feasible == bool(rj.feasible[r])
+        assert ev.objective == pytest.approx(rj.objective[r], rel=rtol)
+        np.testing.assert_allclose(
+            ev.partition_times,
+            rj.part_times[r][:int(rj.nparts[r])], rtol=rtol, atol=atol)
+        np.testing.assert_allclose(
+            [e.hbm_resident for e in ev.node_evals],
+            rj.node_resident[r], rtol=rtol)
+
+
+@pytest.mark.parametrize("arch_name", EXAMPLE_ARCHS)
+def test_jax_matches_numpy_and_scalar_all_example_archs(arch_name):
+    prob = _problem(arch_name, TRAIN, backend="spmd")
+    _assert_three_way(prob, _random_designs(prob, 25, seed=1))
+
+
+@pytest.mark.parametrize("backend", sorted(BACKENDS))
+@pytest.mark.parametrize("shape", [TRAIN, PREFILL, DECODE],
+                         ids=lambda s: s.mode)
+def test_jax_matches_all_modes_and_backends(backend, shape):
+    prob = _problem("tinyllama-1.1b", shape, backend=backend)
+    _assert_three_way(prob, _random_designs(prob, 20, seed=2))
+
+
+@pytest.mark.slow
+def test_jax_matches_objectives_exec_models_and_options():
+    for objective in ("latency", "throughput"):
+        for exec_model in ("streaming", "spmd"):
+            prob = _problem("tinyllama-1.1b", TRAIN, objective=objective,
+                            exec_model=exec_model)
+            _assert_three_way(prob, _random_designs(prob, 20, seed=3))
+    prob = _problem("tinyllama-1.1b", TRAIN, zero1=True,
+                    grad_compression=0.25, overlap_collectives=0.5,
+                    seq_parallel_stash=True)
+    _assert_three_way(prob, _random_designs(prob, 20, seed=4))
+
+
+def test_jax_float64_matches_at_1e9():
+    """x64 on-device arrays recover the numpy engine's 1e-9 contract."""
+    with jax.experimental.enable_x64():
+        prob = _problem("tinyllama-1.1b", TRAIN)
+        designs = _random_designs(prob, 20, seed=5)
+        jev = JaxEvaluator.from_problem(prob)
+        assert str(jev.arrays.flops.dtype) == "float64"
+        _assert_three_way(prob, designs, rtol=1e-9, atol=1e-15)
+
+
+# ----------------------------------------------------------------------
+# on-device search loops
+# ----------------------------------------------------------------------
+
+def test_brute_force_jax_equals_numpy_engine():
+    """Identical enumeration: same optimum design, same point count, same
+    improvement history (indices exact; objectives at f32 rounding)."""
+    for backend in ("simple", "megatron"):
+        for include_cuts in (False, True):
+            a = brute_force(_problem("tinyllama-1.1b", TRAIN,
+                                     backend=backend),
+                            include_cuts=include_cuts, engine="numpy",
+                            batch_size=256)
+            b = brute_force(_problem("tinyllama-1.1b", TRAIN,
+                                     backend=backend),
+                            include_cuts=include_cuts, engine="jax",
+                            batch_size=256)
+            assert a.points == b.points
+            assert a.variables == b.variables
+            assert [i for i, _ in a.history] == [i for i, _ in b.history]
+            for (_, oa), (_, ob) in zip(a.history, b.history):
+                assert oa == pytest.approx(ob, rel=F32_RTOL)
+            # the returned evaluation re-derives through the scalar
+            # reference, so the engines' reported optima are bit-identical
+            assert a.evaluation.objective == b.evaluation.objective
+
+
+def test_brute_force_jax_respects_max_points():
+    res = brute_force(_problem("tinyllama-1.1b", TRAIN), max_points=100,
+                      engine="jax", batch_size=64)
+    assert res.points == 100
+
+
+def test_device_sa_deterministic_and_feasible():
+    """Fixed seed => identical design and history; incumbents are feasible
+    under the scalar reference; different seeds explore differently."""
+    kw = dict(max_iters=300, chains=4, engine="jax")
+    r1 = simulated_annealing(_problem("tinyllama-1.1b", TRAIN), seed=7, **kw)
+    r2 = simulated_annealing(_problem("tinyllama-1.1b", TRAIN), seed=7, **kw)
+    r3 = simulated_annealing(_problem("tinyllama-1.1b", TRAIN), seed=8, **kw)
+    assert r1.variables == r2.variables
+    assert r1.history == r2.history
+    assert r1.evaluation.feasible and r3.evaluation.feasible
+    assert r1.points >= 300
+
+
+def test_device_sa_per_chain_incumbents():
+    from repro.core.optimizers.common import repair
+    from repro.core.accel.search_loops import DeviceSA
+    import jax.numpy as jnp
+
+    prob = _problem("tinyllama-1.1b", TRAIN)
+    sa = DeviceSA(prob)
+    v0 = repair(prob, prob.backend.initial(prob.graph))
+    ev0 = prob.evaluate(v0)
+    state = sa.init_state(v0, ev0, chains=3, seed=11)
+    temps = jnp.asarray([1000.0, 1600.0, 2560.0])
+    state, temps, _ = sa.run(state, temps,
+                             scale=max(abs(ev0.objective), 1e-12) / 1000.0,
+                             cooling=0.98, k_min=1.0, n_sweeps=150)
+    incumbents = sa.best_variables(state)
+    assert len(incumbents) == 3
+    for v, obj, feas in incumbents:
+        ev = prob.evaluate(v)            # device state round-trips exactly
+        assert ev.feasible == feas
+        if feas:
+            assert ev.objective == pytest.approx(obj, rel=F32_RTOL)
+            assert ev.objective <= ev0.objective + 1e-12
+
+
+# ----------------------------------------------------------------------
+# pallas segmented reduction (interpret mode on CPU)
+# ----------------------------------------------------------------------
+
+def test_pallas_segred_matches_numpy():
+    import jax.numpy as jnp
+    from repro.core.accel.pallas_segred import segmented_reduce
+
+    rng = np.random.default_rng(0)
+    N, n = 64, 7
+    vals = rng.random((N, n))
+    cuts = rng.random((N, n - 1)) < 0.3
+    pid = np.concatenate([np.zeros((N, 1), np.int64),
+                          np.cumsum(cuts, axis=1)], axis=1)
+    for op, red, ident in (("max", np.maximum, -np.inf), ("sum", np.add, 0.0)):
+        want = np.full((N, n), ident)
+        for r in range(N):
+            for j in range(n):
+                p = pid[r, j]
+                want[r, p] = red(want[r, p], vals[r, j])
+        got = segmented_reduce(jnp.asarray(vals, jnp.float32),
+                               jnp.asarray(pid), op, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-6)
+
+
+def test_pallas_eval_path_matches():
+    """The use_pallas partition-time route agrees with the jnp route."""
+    prob = _problem("tinyllama-1.1b", TRAIN)
+    designs = _random_designs(prob, 8, seed=6)
+    bev = prob.batched()
+    packed = bev.pack(designs)
+    rn = bev.evaluate_batch(*packed)
+    rp = JaxEvaluator(bev, use_pallas=True,
+                      pallas_interpret=True).evaluate_batch(*packed)
+    np.testing.assert_array_equal(rp.feasible, rn.feasible)
+    np.testing.assert_allclose(rp.part_times, rn.part_times,
+                               rtol=F32_RTOL, atol=1e-12)
+
+
+# ----------------------------------------------------------------------
+# engine registry
+# ----------------------------------------------------------------------
+
+def test_registry_resolution():
+    assert set(ENGINES) == {"scalar", "numpy", "jax"}
+    assert resolve_engine("batched") == "numpy"     # legacy alias
+    assert resolve_engine("scalar") == "scalar"
+    assert resolve_engine("auto") in ("jax", "numpy")
+    if jax_available():
+        assert resolve_engine("auto") == "jax"
+    with pytest.raises(ValueError, match="unknown engine"):
+        resolve_engine("cuda")
+
+
+def test_registry_names_missing_extra(monkeypatch):
+    """Without jax the registry raises a clear EngineUnavailable naming the
+    missing extra, instead of an ImportError mid-search."""
+    import repro.core.accel as accel
+    monkeypatch.setattr(accel, "jax_available", lambda: False)
+    assert accel.resolve_engine("jax", allow_fallback=True) == "numpy"
+    with pytest.raises(EngineUnavailable, match="jax"):
+        accel.resolve_engine("jax", allow_fallback=False)
+    with pytest.raises(EngineUnavailable, match="pip install jax"):
+        accel.require_jax()
+
+
+def test_optimisers_validate_engine_names(monkeypatch):
+    """All three optimiser entry points reject unknown engines, and an
+    explicit engine="jax" without jax raises EngineUnavailable rather than
+    silently degrading."""
+    from repro.core.optimizers import rule_based
+
+    prob = _problem("tinyllama-1.1b", TRAIN, backend="simple")
+    with pytest.raises(ValueError, match="unknown engine"):
+        brute_force(prob, engine="nupmy")
+    with pytest.raises(ValueError, match="unknown engine"):
+        simulated_annealing(prob, engine="cuda", max_iters=1)
+    with pytest.raises(ValueError, match="unknown engine"):
+        rule_based(prob, engine="cuda")
+    import repro.core.accel as accel
+    monkeypatch.setattr(accel, "jax_available", lambda: False)
+    for call in (lambda: brute_force(prob, engine="jax", max_points=1),
+                 lambda: rule_based(prob, engine="jax")):
+        with pytest.raises(EngineUnavailable):
+            call()
+
+
+def test_exporter_lazy_pspec_cached():
+    from repro.core.exporter import _pspec
+    from jax.sharding import PartitionSpec
+    assert _pspec() is PartitionSpec
+    assert _pspec() is _pspec()
