@@ -1,0 +1,166 @@
+"""Fleet lane: aggregate points/s of the vmapped multi-problem sweep.
+
+SAMO's Table IV/V sweeps cover many network x backend cells; this lane
+runs the whole Table-IV network portfolio as ONE fleet program
+(``core/accel/fleet.py``) and compares aggregate throughput against
+searching one problem at a time:
+
+  loop(default)  per-problem ``optimise_mapping`` loop on each optimiser's
+                 default engine (brute force: numpy; SA: the host
+                 parallel-tempering engine) — the pre-fleet baseline
+  loop(jax)      per-problem jitted engine: compiles per architecture and
+                 dispatches one chunk/sweep stream per problem
+  fleet(jax)     one vmapped executable per bucket: one compile and one
+                 dispatch stream for the whole portfolio
+
+Before timing anything the lane asserts the fleet's per-problem optima and
+improvement histories are identical to the per-problem jax loop (the
+portfolio contract). On this repo's 2-core CPU CI box the fleet's win over
+the *jax* loop is modest for brute force (vmap cannot add compute to a
+saturated CPU; the single executable + single dispatch stream is the
+TPU/GPU saturation path) — the headline speedup column is against the
+default-engine per-problem loop. Results go to
+``experiments/benchmarks/fleet_sweep.csv``; a ``fleet`` aggregate row is
+appended to ``experiments/benchmarks/accel_engines.csv``.
+
+``python -m benchmarks.run fleet [--smoke]``
+"""
+from __future__ import annotations
+
+import csv
+import os
+import time
+
+from repro.core.accel import jax_available
+from repro.core.optimizers import brute_force, simulated_annealing
+
+from benchmarks.common import RESULT_DIR, Reporter, make_problem, zoo_arch
+from benchmarks.table4_design_space import _PLATFORM, _device
+
+NETWORKS = ("3-layer", "TFC", "LeNet", "CNV")
+MAX_POINTS = 1_000_000         # enumeration budget per problem
+BATCH = 16384
+SA_SWEEPS = 600                # device SA sweeps per problem
+SA_CHAINS = 32
+
+
+def _problems(nets):
+    return [make_problem(zoo_arch(n), backend="spmd", platform=_PLATFORM)
+            for n in nets]
+
+
+def _append_accel_row(default_rate: float, fleet_rate: float, nets) -> None:
+    """Upsert the fleet aggregate into the accel engine comparison CSV
+    (same columns: numpy = per-problem default-engine loop, jax = fleet).
+    Existing fleet rows for the same portfolio are replaced, so reruns
+    don't accumulate duplicates."""
+    path = os.path.join(RESULT_DIR, "accel_engines.csv")
+    cols = ["network", "backend", "numpy_pts_per_s", "jax_pts_per_s",
+            "speedup"]
+    name = f"fleet({'+'.join(nets)})"
+    rows = []
+    if os.path.exists(path):
+        with open(path, newline="") as f:
+            rows = [r for r in csv.DictReader(f) if r.get("network") != name]
+    rows.append({"network": name, "backend": "spmd",
+                 "numpy_pts_per_s": f"{default_rate:.0f}",
+                 "jax_pts_per_s": f"{fleet_rate:.0f}",
+                 "speedup": f"{fleet_rate / max(default_rate, 1e-9):.1f}x"})
+    os.makedirs(RESULT_DIR, exist_ok=True)
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=cols)
+        w.writeheader()
+        w.writerows(rows)
+
+
+def run(reporter=None, smoke: bool = False) -> Reporter:
+    rep = reporter or Reporter("fleet_sweep")
+    if not jax_available():
+        print("fleet lane: jax not installed — the fleet engine needs the "
+              "jax extra (per-problem engine='numpy' loops still work)")
+        return rep
+    from repro.core.accel.fleet import fleet_annealing, fleet_brute_force
+
+    nets = NETWORKS[:2] if smoke else NETWORKS
+    max_points = 50_000 if smoke else MAX_POINTS
+    sweeps = 50 if smoke else SA_SWEEPS
+    chains = 8 if smoke else SA_CHAINS
+    print(f"fleet lane device: {_device()}  portfolio: {', '.join(nets)}")
+
+    # ---- brute force: per-problem loops vs one vmapped program --------
+    bf_kw = dict(include_cuts=False, max_points=max_points,
+                 batch_size=BATCH)
+    t0 = time.perf_counter()
+    [brute_force(p, engine="numpy", **bf_kw) for p in _problems(nets)]
+    t_loop_def = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    loop_jax = [brute_force(p, engine="jax", **bf_kw)
+                for p in _problems(nets)]
+    t_loop_jax = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    fleet = fleet_brute_force(_problems(nets), **bf_kw)
+    t_fleet = time.perf_counter() - t0
+
+    # the portfolio contract: identical per-problem optima & histories
+    for net, a, b in zip(nets, loop_jax, fleet):
+        if a.variables != b.variables or a.points != b.points \
+                or a.history != b.history:
+            raise SystemExit(f"fleet lane FAILED: {net} fleet result "
+                             f"diverges from the per-problem jax loop")
+    pts = sum(r.points for r in fleet)
+    bf_def = pts / t_loop_def
+    bf_jax = pts / t_loop_jax
+    bf_fleet = pts / t_fleet
+    rep.add(mode="brute_force", portfolio="+".join(nets), points=pts,
+            loop_default_pts_per_s=f"{bf_def:.0f}",
+            loop_jax_pts_per_s=f"{bf_jax:.0f}",
+            fleet_pts_per_s=f"{bf_fleet:.0f}",
+            speedup_vs_default=f"{bf_fleet / max(bf_def, 1e-9):.1f}x",
+            speedup_vs_jax=f"{bf_fleet / max(bf_jax, 1e-9):.1f}x")
+
+    # ---- SA: per-problem sweeps vs one vmapped sweep ------------------
+    sa_kw = dict(seed=0, max_iters=sweeps * chains, chains=chains)
+    t0 = time.perf_counter()
+    [simulated_annealing(p, engine="host", **sa_kw) for p in _problems(nets)]
+    t_sa_def = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    sa_loop = [simulated_annealing(p, engine="jax", **sa_kw)
+               for p in _problems(nets)]
+    t_sa_loop = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    sa_fleet = fleet_annealing(_problems(nets), **sa_kw)
+    t_sa_fleet = time.perf_counter() - t0
+    for net, a, b in zip(nets, sa_loop, sa_fleet):
+        if a.variables != b.variables or a.history != b.history:
+            raise SystemExit(f"fleet lane FAILED: {net} fleet SA diverges "
+                             f"from the per-problem device SA")
+    sa_pts = sum(r.points for r in sa_fleet)
+    sa_def = sa_pts / t_sa_def
+    sa_jax = sa_pts / t_sa_loop
+    sa_fl = sa_pts / t_sa_fleet
+    rep.add(mode="annealing", portfolio="+".join(nets), points=sa_pts,
+            loop_default_pts_per_s=f"{sa_def:.0f}",
+            loop_jax_pts_per_s=f"{sa_jax:.0f}",
+            fleet_pts_per_s=f"{sa_fl:.0f}",
+            speedup_vs_default=f"{sa_fl / max(sa_def, 1e-9):.1f}x",
+            speedup_vs_jax=f"{sa_fl / max(sa_jax, 1e-9):.1f}x")
+
+    rep.print_table("Fleet sweep — per-problem loops vs vmapped "
+                    "multi-problem program (aggregate points/s)")
+    agg_def = (pts + sa_pts) / (t_loop_def + t_sa_def)
+    agg_fleet = (pts + sa_pts) / (t_fleet + t_sa_fleet)
+    print(f"fleet identity: {len(nets)} problems, optima == per-problem "
+          f"jax loop (brute force AND device SA)")
+    print(f"aggregate: fleet {agg_fleet:.0f} pts/s vs per-problem "
+          f"default-engine loop {agg_def:.0f} pts/s "
+          f"({agg_fleet / max(agg_def, 1e-9):.1f}x)")
+    if not smoke:
+        rep.save()
+        _append_accel_row(agg_def, agg_fleet, nets)
+    return rep
+
+
+if __name__ == "__main__":
+    run()

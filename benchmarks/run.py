@@ -1,6 +1,13 @@
 """Benchmark harness: one module per paper table/figure + the roofline
 report, plus a ``tests`` lane running the tier-1 suite with per-test
-timings. ``python -m benchmarks.run [names...]``"""
+timings and engine lanes for the accelerated search.
+
+    python -m benchmarks.run [names...] [--smoke]
+
+``--smoke`` shrinks the smoke-capable lanes (``accel``, ``fleet``) to
+their smallest spaces for CI: the accel smoke lane runs the smallest
+Table-IV space, asserts the jax==numpy optimum agreement, and fails if it
+exceeds 60 s."""
 from __future__ import annotations
 
 import subprocess
@@ -10,6 +17,7 @@ import time
 from benchmarks import (
     fig2_optimizer_compare,
     fig4_batch_partitions,
+    fleet_sweep,
     roofline,
     table4_design_space,
     table5_objectives,
@@ -31,22 +39,30 @@ ALL = {
     "fig4": fig4_batch_partitions.run,
     "roofline": roofline.run,
     "accel": table4_design_space.run_accel,
+    "fleet": fleet_sweep.run,
     "tests": run_tests,
 }
 
 #: lanes that run only when asked for explicitly
-_ON_DEMAND = ("tests", "accel")
+_ON_DEMAND = ("tests", "accel", "fleet")
+
+#: lanes accepting the ``--smoke`` flag
+_SMOKEABLE = ("accel", "fleet")
 
 
 def main(argv=None) -> int:
-    names = (argv or sys.argv[1:]) or [n for n in ALL
-                                       if n not in _ON_DEMAND]
+    argv = list(argv if argv is not None else sys.argv[1:])
+    smoke = "--smoke" in argv
+    while "--smoke" in argv:
+        argv.remove("--smoke")
+    names = argv or [n for n in ALL if n not in _ON_DEMAND]
     for name in names:
         if name not in ALL:
             print(f"unknown benchmark {name!r}; known: {sorted(ALL)}")
             return 1
         t0 = time.time()
-        ret = ALL[name]()
+        kwargs = {"smoke": True} if smoke and name in _SMOKEABLE else {}
+        ret = ALL[name](**kwargs)
         print(f"[{name}] done in {time.time()-t0:.1f}s", flush=True)
         if isinstance(ret, int) and ret != 0:
             return ret                    # tests lane: propagate pytest's rc

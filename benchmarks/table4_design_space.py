@@ -20,6 +20,8 @@ design and objective on the largest example space.
 """
 from __future__ import annotations
 
+import time
+
 from repro.core.accel import jax_available
 from repro.core.backends import BACKENDS
 from repro.core.optimizers import brute_force
@@ -67,10 +69,11 @@ def _rate(make_prob, engine: str, budget_s: float,
     return pts / secs
 
 
-def _check_engine_agreement(max_points: int = 200_000):
+def _check_engine_agreement(max_points: int = 200_000, net: str = "CNV"):
     """numpy and jax must return the identical optimum design AND objective
-    on the largest example space (CNV x spmd). Returns a result dict."""
-    arch = zoo_arch("CNV")
+    on an example space (default: the largest, CNV x spmd). Returns a
+    result dict."""
+    arch = zoo_arch(net)
     make = lambda: make_problem(arch, backend="spmd", platform=_PLATFORM)
     a = brute_force(make(), include_cuts=False, max_points=max_points,
                     engine="numpy", batch_size=NUMPY_BATCH)
@@ -124,34 +127,53 @@ def run(reporter=None) -> Reporter:
     return rep
 
 
-def run_accel(reporter=None) -> Reporter:
+def run_accel(reporter=None, smoke: bool = False) -> Reporter:
     """The ``accel`` lane: numpy vs jax points/s on the Table-IV space
-    (spmd backend — the largest spaces), plus the agreement check."""
+    (spmd backend — the largest spaces), plus the agreement check.
+
+    ``smoke`` (CI: ``python -m benchmarks.run accel --smoke``) restricts
+    the lane to the smallest Table-IV space with short budgets, still
+    asserting the jax==numpy optimum agreement, and fails if it took
+    longer than 60 s.
+    """
+    start = time.perf_counter()
     rep = reporter or Reporter("accel_engines")
     if not jax_available():
         print("accel lane: jax not installed — nothing to compare "
               "(engine='numpy' remains the fastest available engine)")
         return rep
-    print(f"accel lane device: {_device()}")
-    for net in NETWORKS:
+    nets = ("3-layer",) if smoke else NETWORKS
+    budget = 0.3 if smoke else BATCHED_BUDGET_S
+    agree_net = "3-layer" if smoke else "CNV"
+    agree_pts = 20_000 if smoke else 200_000
+    print(f"accel lane device: {_device()}"
+          + (" (smoke)" if smoke else ""))
+    for net in nets:
         arch = zoo_arch(net)
         make = lambda: make_problem(arch, backend="spmd",
                                     platform=_PLATFORM)
-        numpy_rate = _rate(make, "numpy", BATCHED_BUDGET_S)
-        jax_rate = _rate(make, "jax", BATCHED_BUDGET_S, JAX_BATCH)
+        numpy_rate = _rate(make, "numpy", budget)
+        jax_rate = _rate(make, "jax", budget, JAX_BATCH)
         rep.add(network=net, backend="spmd",
                 numpy_pts_per_s=f"{numpy_rate:.0f}",
                 jax_pts_per_s=f"{jax_rate:.0f}",
                 speedup=f"{jax_rate / max(numpy_rate, 1e-9):.1f}x")
     rep.print_table("Accelerated search — numpy vs jax engine points/s")
-    agree = _check_engine_agreement()
-    print(f"engine agreement on CNV x spmd ({agree['points']} pts): "
-          f"design identical = {agree['same_design']}, "
+    agree = _check_engine_agreement(agree_pts, agree_net)
+    print(f"engine agreement on {agree_net} x spmd ({agree['points']} "
+          f"pts): design identical = {agree['same_design']}, "
           f"objective identical = {agree['same_objective']}")
     if not (agree["same_design"] and agree["same_objective"]):
         raise SystemExit("accel lane FAILED: engines disagree on the "
                          "optimum design/objective")
-    rep.save()
+    if smoke:
+        elapsed = time.perf_counter() - start
+        if elapsed > 60:
+            raise SystemExit(f"accel smoke lane FAILED: took {elapsed:.0f}s "
+                             f"(budget 60s)")
+        print(f"accel smoke lane OK in {elapsed:.1f}s")
+    else:
+        rep.save()                      # smoke never clobbers the full CSV
     return rep
 
 

@@ -2,15 +2,28 @@
 # CI inner loop: tier-1 suite on CPU-only jax.
 #
 # JAX_PLATFORMS=cpu pins jax to the CPU backend so the jitted accel paths
-# (core/accel/: engine parity, on-device brute force, device SA, Pallas
-# interpret mode) are exercised on every PR without an accelerator.
+# (core/accel/: engine parity, on-device brute force, device SA + repair,
+# fleet sweeps, Pallas interpret mode) are exercised on every PR without an
+# accelerator. Without jax installed (the CI no-jax matrix job, or
+# REPRO_NO_JAX=1) the suite still passes: tests/conftest.py skips the
+# jax-subject modules and the engine registry's numpy fallbacks run.
 # `-m "not slow"` keeps it under ~2 min; run `python -m pytest` with no
-# filter (or `python -m benchmarks.run tests`) for the full suite, and
-# `python -m benchmarks.run accel` for the numpy-vs-jax engine lane.
+# filter (or `python -m benchmarks.run tests`) for the full suite,
+# `python -m benchmarks.run accel [--smoke]` for the numpy-vs-jax engine
+# lane, and `python -m benchmarks.run fleet` for the multi-problem sweep.
 set -euo pipefail
 cd "$(dirname "$0")"
 
 export JAX_PLATFORMS=cpu
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-python -m pytest -x -q -m "not slow" "$@"
+# Fail loudly (with the real traceback) if src/ is not importable —
+# otherwise pytest silently collects zero tests and "passes".
+if ! python -c "import repro" >/dev/null 2>&1; then
+    echo "ci.sh: FATAL: package 'repro' is not importable from src/." >&2
+    echo "ci.sh: PYTHONPATH=$PYTHONPATH — traceback follows:" >&2
+    python -c "import repro" >&2 || true
+    exit 2
+fi
+
+python -m pytest -x -q --durations=10 -m "not slow" "$@"

@@ -2,18 +2,30 @@
 
 ``core/batched_eval.py`` laid the evaluation out as pure elementwise ops plus
 segment reductions over a static node axis precisely so it could be jitted;
-this package is that jit. It holds three layers:
+this package is that jit. It holds four layers:
 
   lowering.py      BatchedEvaluator flat numpy arrays -> a pytree of device
                    constants (``DeviceArrays``) + a hashable ``StaticSpec``
                    so the jitted programs cache across Problem instances.
-  eval_jax.py      the jitted ``evaluate_batch`` array program
-                   (``jax.ops.segment_max/segment_sum`` for partition times,
+                   Architecture structure (kind columns, scan groups) is
+                   array data, not trace structure, and the node axis can
+                   be padded bit-neutrally — which is what lets fleet.py
+                   vmap one executable over many problems.
+  eval_jax.py      the jitted ``evaluate_batch`` array program (dense
+                   one-hot segment reductions for partition times,
                    optionally a Pallas segmented-reduction kernel with an
                    interpret-mode fallback on CPU).
   search_loops.py  on-device candidate *construction*: mixed-radix digit
                    decode for brute-force chunks and a ``jax.random``-driven
-                   multi-chain simulated-annealing sweep on ``lax.scan``.
+                   multi-chain simulated-annealing sweep on ``lax.scan``,
+                   with infeasible moves repaired on device (masked
+                   clamp-and-propagate — zero host round-trips mid-sweep).
+  fleet.py         multi-problem sweeps: bucket problems by trace
+                   signature, pad + stack their device constants, and vmap
+                   the brute-force chunks / SA sweeps across the problem
+                   axis — one XLA executable searches the whole portfolio,
+                   with per-problem results bit-identical to the
+                   per-problem loops (``pipeline.optimise_portfolio``).
 
 Engine registry
 ---------------
@@ -30,6 +42,7 @@ the missing extra spelled out instead of an ImportError mid-search.
 from __future__ import annotations
 
 import importlib.util
+import os
 
 ENGINES = ("scalar", "numpy", "jax")
 
@@ -42,7 +55,14 @@ class EngineUnavailable(RuntimeError):
 
 
 def jax_available() -> bool:
-    """True when the ``jax`` engine can be used in this environment."""
+    """True when the ``jax`` engine can be used in this environment.
+
+    ``REPRO_NO_JAX=1`` masks an installed jax — CI and local runs use it
+    to exercise the numpy-fallback / EngineUnavailable paths without
+    uninstalling anything (``REPRO_NO_JAX=1 ./ci.sh``).
+    """
+    if os.environ.get("REPRO_NO_JAX", "").lower() not in ("", "0", "false"):
+        return False
     return importlib.util.find_spec("jax") is not None
 
 

@@ -2,12 +2,21 @@
 
 ``_eval_core`` is a line-for-line port of
 ``BatchedEvaluator.evaluate_batch`` + ``_collective_bytes`` onto jnp: pure
-elementwise ops, static kind-column slices, and segmented partition
-reductions via ``jax.ops.segment_max/segment_sum`` (or the Pallas kernel in
+elementwise ops, kind-masked column terms, and segmented partition
+reductions via dense one-hot contractions (or the Pallas kernel in
 ``pallas_segred.py`` when ``StaticSpec.use_pallas`` is set). The numpy
 engine always takes the general segmented path here — its no-cut fast path
 is a host-side shortcut with identical semantics, so agreement holds across
 both layouts.
+
+Unlike the numpy engine (which slices static kind-column index sets), every
+kind-specific term here is a ``jnp.where`` over a mask stored in
+``DeviceArrays``. Adding ``0.0`` on the unmasked columns is exact, so the
+masked form is bitwise identical to the sliced form — and because the mask
+is *data*, the same traced program serves any architecture: the fleet
+engine (``fleet.py``) vmaps this function across a stacked problem axis,
+and padded columns (``DeviceArrays.node_valid``) contribute exactly zero
+to every reduction.
 
 Entry points are module-level and take ``(static, arrays, ...)`` so the XLA
 executable caches across Problem instances (see lowering.py). Large integer
@@ -53,76 +62,60 @@ def _frac(x):
     return (x - 1.0) / x
 
 
+def _madd(total, mask, term):
+    """Masked column add: exact (+0.0 off-mask), vmap/pad-safe."""
+    return total + jnp.where(mask[None, :], term, jnp.zeros_like(term))
+
+
 def _collective_bytes(static: StaticSpec, A: DeviceArrays,
                       si, so, kk, sif, sof, kkf, b_in):
-    """Traced port of BatchedEvaluator._collective_bytes."""
+    """Traced port of BatchedEvaluator._collective_bytes (mask-driven)."""
     fdt = sif.dtype
-    mode = static.mode
     train_mult = 2.0 if static.train else 1.0
     total = jnp.zeros_like(sif)
     batchf = A.batch.astype(fdt)
     rowsf = A.rows.astype(fdt)
     colsf = A.cols.astype(fdt)
     fmf = A.fm_width.astype(fdt)
+    rows_eff = jnp.ones_like(rowsf) if static.decode else rowsf
 
-    def fm_shard(ix):
-        rows = rowsf[ix] if mode != "decode" else 1.0
-        return (batchf[ix] * rows * fmf[ix]) * BF16 / (b_in[:, ix] * kkf[:, ix])
+    fm_shard = (batchf * rows_eff * fmf)[None, :] * BF16 / (b_in * kkf)
 
-    if static.i_tp:
-        ix = np.asarray(static.i_tp)
-        total = total.at[:, ix].add(
-            2.0 * _frac(sof[:, ix]) * fm_shard(ix) * train_mult)
-    if static.i_ep:
-        ix = np.asarray(static.i_ep)
-        rows = rowsf[ix] if mode != "decode" else 1.0
-        tokens_shard = (batchf[ix] * rows) / (b_in[:, ix] * kkf[:, ix])
-        fanout = jnp.maximum(A.ep_topk[ix], 1).astype(fdt)
-        total = total.at[:, ix].add(
-            2.0 * tokens_shard * fanout * fmf[ix] * BF16
-            * _frac(sof[:, ix]) * train_mult)
-    if static.i_vocab:
-        ix = np.asarray(static.i_vocab)
-        total = total.at[:, ix].add(2.0 * _frac(sof[:, ix]) * fm_shard(ix))
-    if static.i_vhead:
-        ix = np.asarray(static.i_vhead)
-        if mode == "decode":
-            total = total.at[:, ix].add(
-                colsf[ix] * BF16 * batchf[ix] / kkf[:, ix]
-                * _frac(sof[:, ix]))
-        else:
-            # distributed softmax stats: constant in s_out, so the scalar
-            # path's s_out > 1 guard must be kept explicitly
-            vh = 2.0 * 8.0 * (batchf[ix] * rowsf[ix]) \
-                / (b_in[:, ix] * kkf[:, ix])
-            total = total.at[:, ix].add(
-                jnp.where(so[:, ix] > 1, vh, jnp.zeros_like(vh)))
+    total = _madd(total, A.m_tp, 2.0 * _frac(sof) * fm_shard * train_mult)
+
+    tokens_shard = (batchf * rows_eff)[None, :] / (b_in * kkf)
+    fanout = jnp.maximum(A.ep_topk, 1).astype(fdt)
+    total = _madd(total, A.m_ep,
+                  2.0 * tokens_shard * (fanout * fmf)[None, :] * BF16
+                  * _frac(sof) * train_mult)
+
+    total = _madd(total, A.m_vocab, 2.0 * _frac(sof) * fm_shard)
+
+    if static.decode:
+        vhead = (colsf * batchf)[None, :] * BF16 / kkf * _frac(sof)
+    else:
+        # distributed softmax stats: constant in s_out, so the scalar
+        # path's s_out > 1 guard must be kept explicitly
+        vh = 2.0 * 8.0 * (batchf * rowsf)[None, :] / (b_in * kkf)
+        vhead = jnp.where(so > 1, vh, jnp.zeros_like(vh))
+    total = _madd(total, A.m_vhead, vhead)
 
     # sequence/context parallelism (s_in > 1): all terms carry the
     # (s_in-1)/s_in factor, vanishing at s_in = 1
-    if static.i_int:
-        ix = np.asarray(static.i_int)
-        kvl = A.kv_limit[ix]
-        kv_div = jnp.where(kvl > 0,
-                           jnp.minimum(sof[:, ix], kvl.astype(fdt)),
-                           jnp.maximum(sof[:, ix], 1.0))
-        dh = fmf[ix] / jnp.maximum(colsf[ix], 1.0)
-        total = total.at[:, ix].add(
-            (batchf[ix] / kkf[:, ix]) * colsf[ix]
-            / jnp.maximum(kv_div, 1.0) * (dh + 2.0) * 4.0
-            * _frac(sif[:, ix]))
-    if static.i_kv:
-        ix = np.asarray(static.i_kv)
-        kvl = A.kv_limit[ix]
-        kv_div2 = jnp.where(kvl > 0,
-                            jnp.minimum(sof[:, ix], kvl.astype(fdt)),
-                            jnp.maximum(sof[:, ix], 1.0)) * kkf[:, ix]
-        total = total.at[:, ix].add(
-            A.kv_bytes[ix] / kv_div2 * _frac(sif[:, ix]) * train_mult)
-    if static.i_carry:
-        ix = np.asarray(static.i_carry)
-        total = total.at[:, ix].add(
-            A.carry_bytes[ix] / kkf[:, ix] * _frac(sif[:, ix]) * train_mult)
+    kvlf = A.kv_limit.astype(fdt)
+    kv_div = jnp.where(A.kv_limit[None, :] > 0,
+                       jnp.minimum(sof, kvlf[None, :]),
+                       jnp.maximum(sof, 1.0))
+    dh = fmf / jnp.maximum(colsf, 1.0)
+    total = _madd(total, A.internal,
+                  (batchf[None, :] / kkf) * colsf[None, :]
+                  / jnp.maximum(kv_div, 1.0) * ((dh + 2.0) * 4.0)[None, :]
+                  * _frac(sif))
+    total = _madd(total, A.m_kv,
+                  A.kv_bytes[None, :] / (kv_div * kkf) * _frac(sif)
+                  * train_mult)
+    total = _madd(total, A.m_carry,
+                  A.carry_bytes[None, :] / kkf * _frac(sif) * train_mult)
 
     # data-parallel gradient all-reduce (per step, ring over k)
     if static.train:
@@ -175,19 +168,16 @@ def _eval_core(static: StaticSpec, A: DeviceArrays,
     inner_per_chip = A.inner_bytes / c
 
     # _state_sharding (KV sharding applies on attention-kind columns)
-    state_div = kkf * sof
-    state_repl = jnp.ones_like(sof)
-    if static.i_attn:
-        ia = np.asarray(static.i_attn)
-        kvl = A.kv_limit[ia]
-        kv_div_a = jnp.where(kvl > 0,
-                             jnp.minimum(sof[:, ia], kvl.astype(fdt)),
-                             sof[:, ia])
-        state_div = state_div.at[:, ia].set(
-            kkf[:, ia] * jnp.maximum(kv_div_a, 1.0) * sif[:, ia])
-        state_repl = state_repl.at[:, ia].set(
-            jnp.where((kvl > 0) & (so[:, ia] > kvl),
-                      sof[:, ia] / kv_div_a, jnp.ones_like(kv_div_a)))
+    kvlf = A.kv_limit.astype(fdt)
+    kv_div_a = jnp.where(A.kv_limit[None, :] > 0,
+                         jnp.minimum(sof, kvlf[None, :]), sof)
+    state_div = jnp.where(A.m_attn[None, :],
+                          kkf * jnp.maximum(kv_div_a, 1.0) * sif,
+                          kkf * sof)
+    state_repl = jnp.where(
+        A.m_attn[None, :] & (A.kv_limit[None, :] > 0)
+        & (so > A.kv_limit[None, :]),
+        sof / kv_div_a, jnp.ones_like(sof))
     state_per_chip = A.state_bytes * state_repl / state_div
 
     train_mult = 3.0 if static.train else 1.0
@@ -215,16 +205,14 @@ def _eval_core(static: StaticSpec, A: DeviceArrays,
             stash_div = stash_div * jnp.maximum(sof, 1.0)
         fm = A.node_d / BF16                   # batch*rows*fm_width, exact
         resident = resident + fm * BF16 / stash_div
-        if static.i_head:
-            ih = np.asarray(static.i_head)
-            resident = resident.at[:, ih].add(
-                3.0 * A.inner_bytes[ih]
-                / (b_in[:, ih] * kkf[:, ih] * jnp.maximum(sof[:, ih], 1.0)))
+        resident = _madd(resident, A.m_head,
+                         3.0 * A.inner_bytes[None, :]
+                         / (b_in * kkf * jnp.maximum(sof, 1.0)))
     else:
         rows = (jnp.ones_like(A.rows) if static.decode else A.rows).astype(fdt)
         resident = w_per_chip + state_per_chip \
-            + 2.0 * A.batch.astype(fdt) * rows * A.fm_width.astype(fdt) \
-            * BF16 / (b_in * kkf)
+            + 2.0 * (A.batch.astype(fdt) * rows * A.fm_width.astype(fdt)
+                     * BF16)[None, :] / (b_in * kkf)
 
     node_time = jnp.maximum(jnp.maximum(compute_s, memory_s), collective_s)
 
@@ -232,10 +220,15 @@ def _eval_core(static: StaticSpec, A: DeviceArrays,
     # (the numpy engine's no-cut fast path is a host shortcut; the general
     # segmented path below is exact for the no-cut case too)
     if n > 1:
-        mism = (b_in[:, :-1] != b_in[:, 1:]) | (kk[:, :-1] != kk[:, 1:])
+        edge_valid = A.node_valid[:-1] & A.node_valid[1:]
+        mism = ((b_in[:, :-1] != b_in[:, 1:]) | (kk[:, :-1] != kk[:, 1:])) \
+            & edge_valid[None, :]
     else:
         mism = jnp.zeros((N, 0), bool)
     iota_n = jnp.arange(n, dtype=idt)
+    # padded columns are neutral everywhere EXCEPT the streaming chip
+    # count (their fold product is 1, not 0) — zero them explicitly there
+    c_eff = jnp.where(A.node_valid[None, :], c, jnp.zeros_like(c))
 
     if single_partition:
         # fast path (trace-time): every candidate is one partition — no
@@ -324,10 +317,10 @@ def _eval_core(static: StaticSpec, A: DeviceArrays,
     # inter matching (Eq. 10), partition-local
     if static.inter_matching and n > 1:
         bad |= (~cb & mism).any(axis=1)
-    # scan tying, partition-local
-    if static.scan_tying and static.scan_pairs:
-        a = np.asarray([p[0] for p in static.scan_pairs])
-        b = np.asarray([p[1] for p in static.scan_pairs])
+    # scan tying, partition-local (consecutive member pairs, padded with
+    # (0, 0) self-pairs which can never differ)
+    if static.scan_tying:
+        a, b = A.pair_a, A.pair_b
         differ = (si[:, a] != si[:, b]) | (so[:, a] != so[:, b]) \
             | (kk[:, a] != kk[:, b])
         differ &= pid[:, a] == pid[:, b]
@@ -336,7 +329,7 @@ def _eval_core(static: StaticSpec, A: DeviceArrays,
     if single_partition:
         bad |= resident.sum(axis=1) > static.hbm_bytes
         if static.exec_model == "streaming":
-            bad |= c.sum(axis=1) > static.chips
+            bad |= c_eff.sum(axis=1) > static.chips
         # single partition: no boundary staging, bandwidth never binds
     else:
         res_part = seg_sum(resident)
@@ -349,7 +342,7 @@ def _eval_core(static: StaticSpec, A: DeviceArrays,
                                        d_io / static.chips, 0.0)
         bad |= (part_valid & (res_tot > static.hbm_bytes)).any(axis=1)
         if static.exec_model == "streaming":
-            chips_part = seg_sum(c)
+            chips_part = seg_sum(c_eff)
             bad |= (part_valid & (chips_part > static.chips)).any(axis=1)
         # bandwidth uses the pre-resharding partition interval, exactly
         # like constraints.check_bandwidth
@@ -383,13 +376,19 @@ class JaxEvaluator:
     Shares the host lowering (packing helpers, base designs, clamp/scope
     semantics) and evaluates through the jitted array program. Results come
     back as a numpy ``BatchResult`` so callers are engine-agnostic.
+
+    ``pad_nodes`` pads the node axis (fleet bucketing); callers still pass
+    unpadded [N, n] fold arrays — the wrapper pads candidates with neutral
+    fold-1 columns and slices results back to the real node count.
     """
 
     def __init__(self, bev, *, use_pallas: bool = False,
-                 pallas_interpret=None):
+                 pallas_interpret=None, pad_nodes=None, pad_pairs=None):
         self.bev = bev
         self.static, self.arrays = lower_program(
-            bev, use_pallas=use_pallas, pallas_interpret=pallas_interpret)
+            bev, use_pallas=use_pallas, pallas_interpret=pallas_interpret,
+            pad_nodes=pad_nodes, pad_pairs=pad_pairs)
+        self.n_pad = self.static.n_nodes
 
     @classmethod
     def from_problem(cls, problem, **kw) -> "JaxEvaluator":
@@ -414,6 +413,13 @@ class JaxEvaluator:
                 f"expected fold arrays [N, {self.bev.n_nodes}] and cut mask "
                 f"[N, {self.bev.n_nodes - 1}]; got s_in {si.shape}, s_out "
                 f"{so.shape}, kern {kk.shape}, cuts {cb.shape}")
+        if self.n_pad > n:
+            pad = ((0, 0), (0, self.n_pad - n))
+            si = np.pad(si, pad, constant_values=1)
+            so = np.pad(so, pad, constant_values=1)
+            kk = np.pad(kk, pad, constant_values=1)
+            cb = np.pad(cb, ((0, 0), (0, self.n_pad - 1 - cb.shape[1])),
+                        constant_values=False)
         out = evaluate_batch_jax(self.static, self.arrays, si, so, kk, cb)
         out = jax.device_get(out)
         return BatchResult(
@@ -421,10 +427,12 @@ class JaxEvaluator:
             feasible=np.asarray(out["feasible"], bool),
             latency=np.asarray(out["latency"], np.float64),
             throughput=np.asarray(out["throughput"], np.float64),
-            part_times=np.asarray(out["part_times"], np.float64),
+            part_times=np.asarray(out["part_times"], np.float64)[:, :n],
             nparts=np.asarray(out["nparts"], np.int64),
             reconf_time=np.asarray(out["reconf_time"], np.float64),
-            node_resident=np.asarray(out["node_resident"], np.float64),
-            node_times=np.asarray(out["node_times"], np.float64),
-            node_collective=np.asarray(out["node_collective"], np.float64),
+            node_resident=np.asarray(out["node_resident"],
+                                     np.float64)[:, :n],
+            node_times=np.asarray(out["node_times"], np.float64)[:, :n],
+            node_collective=np.asarray(out["node_collective"],
+                                       np.float64)[:, :n],
         )

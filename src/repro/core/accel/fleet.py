@@ -1,0 +1,480 @@
+"""Fleet sweeps: one XLA executable searches MANY problems at once.
+
+SAMO's headline tables sweep the optimiser across many model/platform
+pairs, and the per-problem jax engine (search_loops.py) still compiles and
+dispatches one Problem at a time. This module makes the multi-problem
+sweep itself a device program:
+
+  1. **Bucketing** — problems whose trace-shaping configuration matches
+     (mode, backend rules, objective, platform scalars, ModelOptions; see
+     ``StaticSpec``, which since PR 3 carries no per-architecture
+     structure) share a bucket. Within a bucket every per-problem constant
+     is padded to a common shape — node count, decision-slot count, menu
+     radix, scan-pair count — with *neutral* values that provably cannot
+     change any result (lowering.py documents the padding contract; tests
+     assert padded == unpadded bitwise).
+
+  2. **Stacking** — the padded ``DeviceArrays`` (and, for SA, the move
+     tables and chain states) are stacked along a new leading problem
+     axis: one device-resident constant set for the whole bucket.
+
+  3. **vmap** — the *same* traced chunk/sweep bodies the per-problem
+     engine jits (``_bf_chunk_core``, ``_sa_scan``) are ``jax.vmap``-ed
+     over the problem axis and jitted once per bucket. Because the bodies
+     are shared verbatim, every random draw is chain-shaped (never
+     node/edge-shaped), and padding is bitwise-neutral, the fleet returns
+     per-problem optima, objectives and improvement histories IDENTICAL to
+     looping the per-problem jax engine — while dispatching one XLA
+     program per chunk for the whole portfolio instead of one per problem
+     (and compiling once per bucket instead of once per architecture).
+
+Entry points mirror the single-problem optimisers and return one
+``OptimResult`` per problem, in input order:
+
+    fleet_brute_force(problems, include_cuts=..., batch_size=...)
+    fleet_annealing(problems, seed=..., chains=..., max_iters=...)
+
+``core.pipeline.optimise_portfolio`` wraps these behind the engine
+registry (falling back to a per-problem host loop when jax is absent).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+import time
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.accel.eval_jax import JaxEvaluator
+from repro.core.accel.lowering import StaticSpec
+from repro.core.accel.search_loops import (
+    TRACE_COUNTS,
+    DeviceSA,
+    _construction_tables,
+    _pow2ceil,
+    _sa_scan,
+    absorb_improvements,
+    build_sa_tables,
+    chunk_descriptor,
+)
+from repro.core.hdgraph import Variables
+from repro.core.optimizers.common import (
+    OptimResult,
+    incumbent_better,
+    repair,
+)
+
+__all__ = ["fleet_brute_force", "fleet_annealing", "bucket_indices"]
+
+
+def _stack(trees):
+    """Stack a list of identically-shaped pytrees along a new axis 0."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+#: node counts round up to the next multiple of this before bucketing, so
+#: nearly-equal graphs share one executable while a 35-node outlier never
+#: forces 2-3x padding waste onto an 11-node majority
+NODE_TIER = 4
+
+
+def _node_tier(n: int) -> int:
+    return -(-n // NODE_TIER) * NODE_TIER
+
+
+def _bucket_key(problem, tiered: bool) -> tuple:
+    """Problems with equal keys share one StaticSpec (padded node count
+    included via the size tier when ``tiered``) and hence one fleet
+    executable."""
+    b = problem.backend
+    p = problem.platform
+    return (problem.graph.mode, problem.exec_model, problem.objective,
+            problem.batch_amortisation, b.name, b.strict_kv,
+            b.intra_matching, b.inter_matching, b.scan_tying,
+            tuple(sorted(b.granularity.items())), b.fixed_unity,
+            dataclasses.astuple(problem.opts), p,
+            bool(problem.graph.cut_edges),
+            _node_tier(len(problem.graph.nodes)) if tiered else 0)
+
+
+def bucket_indices(problems, tiered: bool = True) -> List[List[int]]:
+    """Group problem indices into fleet buckets (stable order).
+
+    ``tiered`` splits buckets by node-count tier. Brute force is
+    compute-bound over [B, n] chunks, so padding an 11-node graph to a
+    35-node outlier costs real throughput — it buckets tiered. The SA
+    sweep's arrays are chain-sized (tiny); its cost is the op count of the
+    scan body, so ONE executable for the whole portfolio beats several
+    tier compiles — it buckets untiered.
+    """
+    byk = {}
+    for i, p in enumerate(problems):
+        byk.setdefault(_bucket_key(p, tiered), []).append(i)
+    return list(byk.values())
+
+
+# ----------------------------------------------------------------------
+# vmapped entry points (jitted once per bucket)
+# ----------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2))
+def _fleet_bf_chunk(static: StaticSpec, B: int, no_cut: bool,
+                    A, desc, sigma, T, cb_row, take):
+    """One enumeration chunk for EVERY problem in a bucket.
+
+    The digit decode runs with the problem axis flattened into the gather
+    index space (global row offsets) instead of vmapped: XLA CPU lowers
+    batched gathers to scalar loops, while flat row/element gathers stay
+    vectorised — the arithmetic (and hence every decoded integer) is
+    identical to ``_bf_chunk_core``. The evaluation half is the verbatim
+    ``_bf_eval_part`` under ``jax.vmap``, which keeps per-problem float
+    results bit-identical to the per-problem engine.
+    """
+    from repro.core.accel.search_loops import (
+        _bf_decode_digits,
+        _bf_eval_part,
+    )
+    TRACE_COUNTS["fleet_bf_chunk"] += 1
+    P, S = desc.shape[0], desc.shape[1]
+    n = static.n_nodes
+    mm = T.shape[-1]
+    idt = A.batch.dtype
+    digits = jax.vmap(functools.partial(_bf_decode_digits, B, idt))(desc)
+    digits_flat = digits.transpose(0, 2, 1).reshape(P * (S + 1), B)
+    offs = (jnp.arange(P, dtype=sigma.dtype) * (S + 1))[:, None, None]
+    rows = (sigma + offs).reshape(-1)                   # [P*3*n] global
+    dig = jnp.take(digits_flat, rows, axis=0)           # [P*3*n, B]
+    T_flat = T.reshape(P * 3 * n, mm)
+    val = jnp.take_along_axis(T_flat, dig, axis=1)      # [P*3*n, B]
+    val = val.reshape(P, 3, n, B)
+    si = val[:, 0].transpose(0, 2, 1)                   # [P, B, n]
+    so = val[:, 1].transpose(0, 2, 1)
+    kk = val[:, 2].transpose(0, 2, 1)
+    return jax.vmap(functools.partial(_bf_eval_part, static, B, no_cut))(
+        A, si, so, kk, cb_row, take)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3))
+def _fleet_sa_sweeps(static: StaticSpec, gran, has_cut_edges: bool,
+                     n_sweeps: int, A, menus, menu_sizes, clamp, kv_fix,
+                     state, temps, scale, cooling, k_min):
+    TRACE_COUNTS["fleet_sa_sweeps"] += 1
+
+    def one(Ai, mi, szi, ci, kfi, sti, ti, sci):
+        return _sa_scan(static, gran, has_cut_edges, n_sweeps, Ai, mi,
+                        szi, ci, kfi, sti, ti, sci, cooling, k_min)
+
+    return jax.vmap(one)(A, menus, menu_sizes, clamp, kv_fix, state,
+                         temps, scale)
+
+
+# ----------------------------------------------------------------------
+# brute force
+# ----------------------------------------------------------------------
+
+class _BFMember:
+    """Host-side per-problem enumeration state inside one bucket."""
+
+    def __init__(self, index: int, problem, include_cuts: bool,
+                 max_cuts: int):
+        from repro.core.optimizers.brute_force import _cut_sets
+        self.index = index
+        self.problem = problem
+        self.graph = problem.graph
+        self.backend = problem.backend
+        self.slots, self.menus = self.backend.space(self.graph,
+                                                    problem.platform)
+        self.sizes = [len(m) for m in self.menus]
+        self.strides = [1] * len(self.slots)
+        for s in range(len(self.slots) - 2, -1, -1):
+            self.strides[s] = self.strides[s + 1] * self.sizes[s + 1]
+        self.total = 1
+        for s in self.sizes:
+            self.total *= s
+        self.max_menu = max(self.sizes, default=1)
+        self.n = len(self.graph.nodes)
+        self.base = self.backend.initial(self.graph).with_cuts(())
+        self.cut_sets = list(_cut_sets(self.graph.cut_edges, include_cuts,
+                                       max_cuts))
+        # search state; ``planned`` runs ahead of ``points`` by the chunks
+        # still in flight (the chunk loop is software-pipelined)
+        self.best_v: Optional[Variables] = None
+        self.best_obj = np.inf
+        self.points = 0
+        self.planned = 0
+        self.history: List[Tuple[int, float]] = []
+        self.stopped = False
+
+    def tables_for(self, k: int, n_pad: int, s_pad: int, mm_pad: int, idt):
+        """Padded (sigma, T, cb_row) for this member's k-th cut set, or
+        inert tables when the member has no k-th cut set."""
+        E = max(n_pad - 1, 0)
+        if k >= len(self.cut_sets):
+            return (np.full((3, n_pad), s_pad, idt),
+                    np.ones((3, n_pad, mm_pad), idt),
+                    np.zeros(E, bool), None)
+        from repro.core.optimizers.brute_force import (
+            _clamp_tables,
+            _slot_scopes,
+        )
+        cuts = self.cut_sets[k]
+        scopes = _slot_scopes(self.backend, self.graph, self.slots, cuts)
+        tabs = _clamp_tables(self.graph, self.slots, scopes, self.menus)
+        sigma, T = _construction_tables(self.graph, self.backend,
+                                        self.slots, scopes, tabs,
+                                        self.menus, cuts, self.base,
+                                        self.max_menu, idt)
+        S = len(self.slots)
+        sig = np.full((3, n_pad), s_pad, idt)
+        sig[:, :self.n] = np.where(sigma == S, s_pad, sigma)
+        Tp = np.ones((3, n_pad, mm_pad), idt)
+        Tp[:, :self.n, :self.max_menu] = T
+        cb_row = np.zeros(E, bool)
+        for c in cuts:
+            cb_row[c] = True
+        return sig, Tp, cb_row, cuts
+
+    def descriptor(self, produced: int, take: int, s_pad: int, idt):
+        """Chunk descriptor rows (shared helper; padded slots -> digit 0)."""
+        return chunk_descriptor(self.strides, self.sizes, produced, take,
+                                s_pad, idt)
+
+    def absorb(self, objs: np.ndarray, bi_si, bi_so, bi_kk,
+               cb_row: np.ndarray, take: int) -> None:
+        """Identical improvement bookkeeping to the per-problem engine
+        (same shared helper)."""
+        objs = np.asarray(objs[:take], np.float64)
+        self.problem.note_batch_evals(take)
+        last_imp, self.best_obj = absorb_improvements(
+            objs, self.best_obj, self.points, self.history)
+        if last_imp is not None:
+            n = self.n
+            self.best_v = Variables(
+                tuple(int(e) for e in np.nonzero(cb_row[:max(n - 1, 0)])[0]),
+                tuple(int(x) for x in np.asarray(bi_si)[:n]),
+                tuple(int(x) for x in np.asarray(bi_so)[:n]),
+                tuple(int(x) for x in np.asarray(bi_kk)[:n]))
+        self.points += take
+
+    def result(self, elapsed: float) -> OptimResult:
+        best_v = self.best_v
+        if best_v is None:                     # no feasible point found
+            best_v = self.backend.initial(self.graph)
+        best_eval = self.problem.evaluate(best_v)
+        return OptimResult(best_v, best_eval, self.points, elapsed,
+                           self.history, name="brute_force")
+
+
+def fleet_brute_force(problems: Sequence, include_cuts: bool = False,
+                      max_cuts: int = 1, max_points: Optional[int] = None,
+                      batch_size: int = 4096) -> List[OptimResult]:
+    """Vmapped multi-problem brute force.
+
+    Per-problem results (optimum design, objective, point count and
+    improvement history) are identical to calling
+    ``brute_force(problem, engine="jax", ...)`` in a loop; ``max_points``
+    applies per problem. Problems are grouped into buckets (one XLA
+    executable each) and each bucket's chunks run lock-step across its
+    members; each result's ``seconds`` is therefore its BUCKET's wall
+    time (members search simultaneously — per-problem times don't sum).
+    """
+    results: List[Optional[OptimResult]] = [None] * len(problems)
+    for idxs in bucket_indices(problems):
+        start = time.perf_counter()
+        members = [_BFMember(i, problems[i], include_cuts, max_cuts)
+                   for i in idxs]
+        n_pad = max(m.n for m in members)
+        s_pad = max(len(m.slots) for m in members)
+        mm_pad = max(m.max_menu for m in members)
+        pairs_pad = max(
+            (len(m.problem.batched().scan_pairs) for m in members),
+            default=0) or 1
+        jevs = [JaxEvaluator.from_problem(m.problem, pad_nodes=n_pad,
+                                          pad_pairs=pairs_pad)
+                for m in members]
+        static = jevs[0].static
+        assert all(j.static == static for j in jevs), \
+            "bucketed problems must share a StaticSpec"
+        A = _stack([j.arrays for j in jevs])
+        idt = np.int64 if jevs[0].arrays.batch.dtype == jnp.int64 \
+            else np.int32
+        B = min(batch_size, _pow2ceil(max(m.total for m in members)))
+
+        def absorb(entry):
+            out, takes_np, cb_np_k = entry
+            objs, bi_si, bi_so, bi_kk = (np.asarray(x) for x in out)
+            for mi, m in enumerate(members):
+                take = int(takes_np[mi])
+                if take > 0:
+                    m.absorb(objs[mi], bi_si[mi], bi_so[mi], bi_kk[mi],
+                             cb_np_k[mi], take)
+
+        K = max(len(m.cut_sets) for m in members)
+        for k in range(K):
+            tables = [m.tables_for(k, n_pad, s_pad, mm_pad, idt)
+                      for m in members]
+            sigma_d = jnp.asarray(np.stack([t[0] for t in tables]))
+            T_d = jnp.asarray(np.stack([t[1] for t in tables]))
+            cb_np = np.stack([t[2] for t in tables])
+            cb_d = jnp.asarray(cb_np)
+            active = [t[3] is not None and not m.stopped
+                      for m, t in zip(members, tables)]
+            produced = [0] * len(members)
+            # 1-deep software pipeline: dispatch chunk j+1 before blocking
+            # on chunk j's results, so host bookkeeping overlaps device
+            # compute. ``planned`` (not ``points``) drives the budget math
+            # and matches the per-problem loop's accounting exactly.
+            pending: List[tuple] = []
+            while True:
+                takes = np.zeros(len(members), np.int64)
+                descs = np.zeros((len(members), s_pad, 4), idt)
+                descs[:, :, 0] = 1
+                descs[:, :, 2] = 1
+                descs[:, :, 3] = 1
+                for mi, m in enumerate(members):
+                    if not active[mi] or m.stopped:
+                        continue
+                    take = min(B, m.total - produced[mi])
+                    if max_points is not None:
+                        take = min(take, max_points - m.planned)
+                    if take <= 0:
+                        if max_points is not None and \
+                                m.planned >= max_points:
+                            m.stopped = True
+                        active[mi] = False
+                        continue
+                    takes[mi] = take
+                    descs[mi] = m.descriptor(produced[mi], take, s_pad, idt)
+                    m.planned += take
+                    produced[mi] += take
+                    if produced[mi] >= m.total:
+                        active[mi] = False
+                    if max_points is not None and m.planned >= max_points:
+                        m.stopped = True
+                if not takes.any():
+                    break
+                out = _fleet_bf_chunk(
+                    static, B, k == 0, A, jnp.asarray(descs), sigma_d,
+                    T_d, cb_d, jnp.asarray(takes))
+                pending.append((out, takes, cb_np))
+                if len(pending) > 1:
+                    absorb(pending.pop(0))
+            for entry in pending:       # drain at the cut-set boundary
+                absorb(entry)
+        elapsed = time.perf_counter() - start
+        for m in members:
+            results[m.index] = m.result(elapsed)
+    return results
+
+
+# ----------------------------------------------------------------------
+# simulated annealing
+# ----------------------------------------------------------------------
+
+def fleet_annealing(problems: Sequence, seed: int = 0,
+                    k_start: float = 1000.0, k_min: float = 1.0,
+                    cooling: float = 0.98,
+                    max_iters: Optional[int] = None,
+                    objective_scale: Optional[float] = None,
+                    chains: int = 1) -> List[OptimResult]:
+    """Vmapped multi-problem device SA.
+
+    One ``lax.scan`` sweep loop advances every problem's chains in
+    lock-step — proposal, on-device repair, evaluation, Metropolis and
+    incumbent tracking all stay on the accelerator for the entire
+    schedule (zero host round-trips mid-sweep). Per-problem trajectories
+    are bit-identical to ``simulated_annealing(problem, engine="jax")``
+    with the same seed: the sweep body is shared verbatim and every
+    random draw is chain-shaped, so padding cannot perturb the stream.
+    As in ``fleet_brute_force``, each result's ``seconds`` is its
+    bucket's wall time (members sweep simultaneously).
+    """
+    from repro.core.optimizers.annealing import LADDER_SPREAD, _scale_for
+
+    chains = max(chains, 1)
+    results: List[Optional[OptimResult]] = [None] * len(problems)
+    for idxs in bucket_indices(problems, tiered=False):
+        start = time.perf_counter()
+        members = [problems[i] for i in idxs]
+        n_pad = max(len(p.graph.nodes) for p in members)
+        pairs_pad = max(
+            (len(p.batched().scan_pairs) for p in members),
+            default=0) or 1
+        # build each member's move tables once, then pad the menu axis to
+        # the bucket radix (pad menus hold fold 1; padded entries are
+        # never drawn — menu_sizes is unchanged)
+        tabs = [build_sa_tables(p, pad_nodes=n_pad) for p in members]
+        mm_pad = max(t[0].shape[-1] for t in tabs)
+        tabs = [(np.pad(t[0], ((0, 0), (0, 0),
+                              (0, mm_pad - t[0].shape[-1])),
+                        constant_values=1),) + t[1:] for t in tabs]
+        sas = [DeviceSA(p, pad_nodes=n_pad, pad_pairs=pairs_pad,
+                        tables=t) for p, t in zip(members, tabs)]
+        static = sas[0].static
+        assert all(s.static == static and s.gran == sas[0].gran
+                   and s.has_cut_edges == sas[0].has_cut_edges
+                   for s in sas), \
+            "bucketed problems must share a StaticSpec"
+
+        v0s, ev0s, scales, states, temps = [], [], [], [], []
+        for p, sa in zip(members, sas):
+            v0 = repair(p, p.backend.initial(p.graph))
+            ev0 = p.evaluate(v0)
+            v0s.append(v0)
+            ev0s.append(ev0)
+            scales.append(_scale_for(ev0, objective_scale))
+            states.append(sa.init_state(v0, ev0, chains, seed))
+            temps.append(jnp.asarray([k_start * (LADDER_SPREAD ** c)
+                                      for c in range(chains)]))
+
+        if max_iters is not None:
+            total_sweeps = max(1, -(-max_iters // chains))
+        else:
+            total_sweeps = max(1, math.ceil(math.log(k_min / k_start)
+                                            / math.log(cooling)))
+
+        state_st, temps_st, traces = _fleet_sa_sweeps(
+            static, sas[0].gran, sas[0].has_cut_edges, total_sweeps,
+            _stack([s.A for s in sas]),
+            jnp.stack([s.menus for s in sas]),
+            jnp.stack([s.menu_sizes for s in sas]),
+            jnp.stack([s.clamp for s in sas]),
+            jnp.stack([s.kv_fix for s in sas]),
+            _stack(states), jnp.stack(temps),
+            jnp.asarray(np.asarray(scales, np.float64)),
+            cooling, k_min)
+        t_obj = np.asarray(traces[0], np.float64)    # [P, sweeps, chains]
+        t_feas = np.asarray(traces[1], bool)
+        elapsed = time.perf_counter() - start
+
+        for mi, (p, sa, ev0) in enumerate(zip(members, sas, ev0s)):
+            history = [(0, ev0.objective)]
+            g_best, g_feas = ev0.objective, ev0.feasible
+            for t in range(total_sweeps):
+                row_f = t_feas[mi, t]
+                if row_f.any():
+                    c = int(np.argmin(np.where(row_f, t_obj[mi, t], np.inf)))
+                else:
+                    c = int(np.argmin(t_obj[mi, t]))
+                if incumbent_better(bool(row_f[c]), float(t_obj[mi, t, c]),
+                                    g_feas, g_best):
+                    g_best = float(t_obj[mi, t, c])
+                    g_feas = bool(row_f[c])
+                    history.append(((t + 1) * chains, g_best))
+            member_state = jax.tree_util.tree_map(lambda x: x[mi], state_st)
+            best_v, best_obj, best_feas = None, np.inf, False
+            for v, o, f in sa.best_variables(member_state):
+                if best_v is None or incumbent_better(f, o, best_feas,
+                                                      best_obj):
+                    best_v, best_obj, best_feas = v, o, f
+            best_eval = p.evaluate(best_v)
+            p.note_batch_evals(total_sweeps * chains)
+            results[idxs[mi]] = OptimResult(
+                best_v, best_eval, total_sweeps * chains, elapsed, history,
+                name=f"annealing-jax{chains}")
+    return results

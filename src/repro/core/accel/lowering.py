@@ -6,17 +6,26 @@ result into the two halves a jitted program needs:
 
   ``StaticSpec``    an immutable, hashable bundle of everything that shapes
                     the traced program: mode/backend/objective flags, the
-                    platform scalars, and the kind-specific column index
-                    sets (static python tuples, so kind terms compile to
-                    fixed slices, exactly like the numpy engine).
+                    platform scalars, and the (padded) node count. Since
+                    PR 3 the spec carries NO per-architecture structure —
+                    kind columns, scan groups and tying pairs all live in
+                    ``DeviceArrays`` as data — so two different graphs with
+                    the same mode/backend/platform and padded node count
+                    share ONE spec and hence one XLA executable, and the
+                    fleet engine (``fleet.py``) can ``vmap`` the program
+                    across a stacked problem axis.
   ``DeviceArrays``  a NamedTuple pytree of ``jnp`` arrays: per-node
-                    workload quantities, masks, and the mesh-realisability
-                    lookup table.
+                    workload quantities, kind masks, scan-tying pairs,
+                    validity masks and the mesh-realisability lookup table.
 
-Because ``StaticSpec`` is hashable and the jitted entry points are plain
-module-level functions taking (static, arrays, ...), XLA compilation caches
-across Problem instances: two problems with the same graph family, platform
-and flags hit the same executable.
+Padding: ``lower_program(..., pad_nodes=N)`` pads every per-node array to N
+columns with *neutral* nodes (zero work, fold menus pinned to 1, no cuts
+allowed into them) and records the real node count in ``node_valid`` /
+``n_valid``. Padded evaluation is bit-identical to unpadded evaluation —
+each padded column contributes exactly ``+0.0`` / ``max(..., 0.0)`` /
+``False`` to every reduction — which is what lets the fleet engine stack
+differently-sized graphs into one program (tests assert the bitwise
+agreement).
 
 Precision: device arrays are float32/int32 unless jax x64 is enabled
 (``jax.config.update("jax_enable_x64", True)``), in which case the lowering
@@ -26,7 +35,7 @@ emits float64/int64 and the engine agrees with the scalar reference at 1e-9
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import numpy as np
 
@@ -40,7 +49,13 @@ MAX_TABLE_VALUES = 64
 
 @dataclass(frozen=True)
 class StaticSpec:
-    """Hashable trace-shaping configuration for the jitted array program."""
+    """Hashable trace-shaping configuration for the jitted array program.
+
+    Deliberately architecture-free: everything that differs between two
+    graphs mapped onto the same platform/backend/mode is array *data*
+    (``DeviceArrays``), not trace structure. ``n_nodes`` is the PADDED node
+    count when the lowering was padded.
+    """
 
     n_nodes: int
     mode: str                       # train | prefill | decode
@@ -65,18 +80,6 @@ class StaticSpec:
     dma_bw: float
     reconf_fixed_s: float
     chips: int
-    # kind-specific static column index sets (see batched_eval._lower)
-    i_attn: Tuple[int, ...]
-    i_head: Tuple[int, ...]
-    i_tp: Tuple[int, ...]
-    i_ep: Tuple[int, ...]
-    i_vocab: Tuple[int, ...]
-    i_vhead: Tuple[int, ...]
-    i_int: Tuple[int, ...]
-    i_kv: Tuple[int, ...]
-    i_carry: Tuple[int, ...]
-    scan_pairs: Tuple[Tuple[int, int], ...]
-    scan_groups: Tuple[Tuple[int, ...], ...]   # member lists per scan group
     val_cap: int                    # realisability lut sentinel slot
     use_pallas: bool = False        # Pallas segmented reduction for T(P_i)
     pallas_interpret: bool = False  # interpret-mode fallback (CPU)
@@ -91,7 +94,13 @@ class StaticSpec:
 
 
 class DeviceArrays(NamedTuple):
-    """Per-node device constants (a pytree; all leaves are jnp arrays)."""
+    """Per-node device constants (a pytree; all leaves are jnp arrays).
+
+    The fleet engine stacks several problems' ``DeviceArrays`` along a new
+    leading axis and ``vmap``s the evaluation over it, so every
+    per-problem quantity — including the kind masks and the scan-tying
+    pair lists — must be a leaf here, never static trace structure.
+    """
 
     flops: "jax.Array"
     weight_bytes: "jax.Array"
@@ -116,6 +125,21 @@ class DeviceArrays(NamedTuple):
     cut_allowed: "jax.Array"
     real_table: "jax.Array"         # [nv, nv, nv] bool over the fold menu
     val_lut: "jax.Array"            # fold value -> menu index (-1 unknown)
+    # kind-specific column masks (see batched_eval._lower's index sets)
+    m_attn: "jax.Array"
+    m_head: "jax.Array"
+    m_tp: "jax.Array"
+    m_ep: "jax.Array"
+    m_vocab: "jax.Array"
+    m_vhead: "jax.Array"
+    m_kv: "jax.Array"
+    m_carry: "jax.Array"
+    # scan-tying consecutive member pairs, padded with (0, 0) self-pairs
+    pair_a: "jax.Array"             # [n_pairs_pad]
+    pair_b: "jax.Array"
+    # padding bookkeeping
+    node_valid: "jax.Array"         # [n] bool; False on padded columns
+    n_valid: "jax.Array"            # scalar: count of real nodes
 
 
 def _realizability_table(bev) -> Tuple[np.ndarray, np.ndarray, int]:
@@ -157,14 +181,34 @@ def _realizability_table(bev) -> Tuple[np.ndarray, np.ndarray, int]:
     return table, lut, val_max + 1
 
 
+def _pad1(a: np.ndarray, n_pad: int, fill) -> np.ndarray:
+    """Pad a per-node (or per-edge) 1-D array to ``n_pad`` with ``fill``."""
+    if len(a) >= n_pad:
+        return a
+    out = np.full(n_pad, fill, a.dtype)
+    out[:len(a)] = a
+    return out
+
+
+def _mask(index_set, n: int, n_pad: int) -> np.ndarray:
+    m = np.zeros(n_pad, bool)
+    m[np.asarray(index_set, np.int64)] = True
+    return m
+
+
 def lower_program(bev, *, use_pallas: bool = False,
-                  pallas_interpret: bool | None = None
+                  pallas_interpret: bool | None = None,
+                  pad_nodes: Optional[int] = None,
+                  pad_pairs: Optional[int] = None
                   ) -> Tuple[StaticSpec, DeviceArrays]:
     """Lower a host ``BatchedEvaluator`` onto the default jax device.
 
     ``use_pallas`` routes the partition-time segmented reduction through the
     Pallas kernel (the TPU hot path); ``pallas_interpret`` forces interpret
     mode (defaults to True off-TPU so the kernel stays runnable on CPU).
+    ``pad_nodes``/``pad_pairs`` pad the node axis / scan-pair list so
+    problems of different sizes can share one StaticSpec (fleet sweeps);
+    padded columns are neutral and provably cannot change any result.
     """
     jax = require_jax()
     import jax.numpy as jnp
@@ -177,9 +221,14 @@ def lower_program(bev, *, use_pallas: bool = False,
     if pallas_interpret is None:
         pallas_interpret = jax.default_backend() != "tpu"
 
+    n = bev.n_nodes
+    np_ = n if pad_nodes is None else int(pad_nodes)
+    if np_ < n:
+        raise ValueError(f"pad_nodes={np_} < graph node count {n}")
+
     plat, opts = bev.platform, bev.opts
     static = StaticSpec(
-        n_nodes=bev.n_nodes,
+        n_nodes=np_,
         mode=bev.mode,
         exec_model=bev.exec_model,
         objective=bev.objective,
@@ -200,46 +249,67 @@ def lower_program(bev, *, use_pallas: bool = False,
         dma_bw=float(plat.dma_bw),
         reconf_fixed_s=float(plat.reconf_fixed_s),
         chips=plat.chips,
-        i_attn=tuple(map(int, bev.i_attn)),
-        i_head=tuple(map(int, bev.i_head)),
-        i_tp=tuple(map(int, bev.i_tp)),
-        i_ep=tuple(map(int, bev.i_ep)),
-        i_vocab=tuple(map(int, bev.i_vocab)),
-        i_vhead=tuple(map(int, bev.i_vhead)),
-        i_int=tuple(map(int, bev.i_int)),
-        i_kv=tuple(map(int, bev.i_kv)),
-        i_carry=tuple(map(int, bev.i_carry)),
-        scan_pairs=tuple((int(a), int(b)) for a, b in bev.scan_pairs),
-        scan_groups=tuple(tuple(m) for m
-                          in bev.graph.scan_groups().values()),
         val_cap=cap,
         use_pallas=use_pallas,
         pallas_interpret=pallas_interpret,
     )
 
+    # scan-tying pairs padded with (0, 0): a self-pair can never "differ"
+    pairs = bev.scan_pairs
+    pp = max(pairs.shape[0], 1) if pad_pairs is None else int(pad_pairs)
+    if pp < pairs.shape[0]:
+        raise ValueError(f"pad_pairs={pp} < pair count {pairs.shape[0]}")
+    pair_a = np.zeros(pp, np.int64)
+    pair_b = np.zeros(pp, np.int64)
+    pair_a[:pairs.shape[0]] = pairs[:, 0]
+    pair_b[:pairs.shape[0]] = pairs[:, 1]
+
+    node_valid = np.zeros(np_, bool)
+    node_valid[:n] = True
+
+    ef = lambda a, fill: jnp.asarray(_pad1(np.asarray(a, np.float64),
+                                           np_, fill), fdt)
+    ei = lambda a, fill: jnp.asarray(_pad1(np.asarray(a, np.int64),
+                                           np_, fill), idt)
+    eb = lambda a: jnp.asarray(_pad1(np.asarray(a, bool), np_, False))
+    km = lambda ix: jnp.asarray(_mask(ix, n, np_))
+
     arrays = DeviceArrays(
-        flops=jnp.asarray(bev.flops, fdt),
-        weight_bytes=jnp.asarray(bev.weight_bytes, fdt),
-        act_bytes=jnp.asarray(bev.act_bytes, fdt),
-        inner_bytes=jnp.asarray(bev.inner_bytes, fdt),
-        state_bytes=jnp.asarray(bev.state_bytes, fdt),
-        kv_bytes=jnp.asarray(bev.kv_bytes, fdt),
-        carry_bytes=jnp.asarray(bev.carry_bytes, fdt),
-        node_d=jnp.asarray(bev.node_d, fdt),
-        reshard_full=jnp.asarray(bev.reshard_full, fdt),
-        batch=jnp.asarray(bev.batch, idt),
-        rows=jnp.asarray(bev.rows, idt),
-        cols=jnp.asarray(bev.cols, idt),
-        fm_width=jnp.asarray(bev.fm_width, idt),
-        col_div=jnp.asarray(bev.col_div, idt),
-        kv_limit=jnp.asarray(bev.kv_limit, idt),
-        ep_topk=jnp.asarray(bev.ep_topk, idt),
-        scan_group=jnp.asarray(bev.scan_group, idt),
-        internal=jnp.asarray(bev.internal),
-        elementwise=jnp.asarray(bev.elementwise),
-        weight_stream=jnp.asarray(bev.weight_stream),
-        cut_allowed=jnp.asarray(bev.cut_allowed),
+        flops=ef(bev.flops, 0.0),
+        weight_bytes=ef(bev.weight_bytes, 0.0),
+        act_bytes=ef(bev.act_bytes, 0.0),
+        inner_bytes=ef(bev.inner_bytes, 0.0),
+        state_bytes=ef(bev.state_bytes, 0.0),
+        kv_bytes=ef(bev.kv_bytes, 0.0),
+        carry_bytes=ef(bev.carry_bytes, 0.0),
+        node_d=ef(bev.node_d, 0.0),
+        reshard_full=ef(bev.reshard_full, 0.0),
+        batch=ei(bev.batch, 1),
+        rows=ei(bev.rows, 1),
+        cols=ei(bev.cols, 1),
+        fm_width=ei(bev.fm_width, 0),
+        col_div=ei(bev.col_div, 1),
+        kv_limit=ei(bev.kv_limit, 0),
+        ep_topk=ei(bev.ep_topk, 0),
+        scan_group=ei(bev.scan_group, -1),
+        internal=eb(bev.internal),
+        elementwise=eb(bev.elementwise),
+        weight_stream=eb(bev.weight_stream),
+        cut_allowed=jnp.asarray(_pad1(np.asarray(bev.cut_allowed, bool),
+                                      max(np_ - 1, 0), False)),
         real_table=jnp.asarray(table),
         val_lut=jnp.asarray(lut, idt),
+        m_attn=km(bev.i_attn),
+        m_head=km(bev.i_head),
+        m_tp=km(bev.i_tp),
+        m_ep=km(bev.i_ep),
+        m_vocab=km(bev.i_vocab),
+        m_vhead=km(bev.i_vhead),
+        m_kv=km(bev.i_kv),
+        m_carry=km(bev.i_carry),
+        pair_a=jnp.asarray(pair_a, idt),
+        pair_b=jnp.asarray(pair_b, idt),
+        node_valid=jnp.asarray(node_valid),
+        n_valid=jnp.asarray(n, idt),
     )
     return static, arrays

@@ -15,8 +15,11 @@ to Python, so both search loops build their candidates on device:
   annealing     a ``jax.random``-driven multi-chain sweep on ``lax.scan``:
                 each sweep proposes one move per chain (cut add/remove/move
                 or a joint fold-triple redraw scattered over the backend's
-                tying scope), evaluates all chains in one batch, applies
-                the Eq. 11 Metropolis rule per chain on a geometric
+                tying scope), REPAIRS the proposal on device (a masked
+                clamp-and-propagate step: strict-KV violations clamp to the
+                largest legal menu value and re-propagate — no host
+                round-trip mid-sweep), evaluates all chains in one batch,
+                applies the Eq. 11 Metropolis rule per chain on a geometric
                 temperature ladder, and tracks per-chain incumbents on
                 device. Deterministic for a fixed seed. Unlike the host
                 parallel-tempering engine there are no replica exchanges
@@ -24,9 +27,21 @@ to Python, so both search loops build their candidates on device:
                 different (device-shaped) explorer, not a bit-identical
                 port.
 
+Every random draw in the SA sweep has a shape that depends only on the
+chain count — never on the (possibly padded) node or edge axis — so the
+fleet engine's padded, vmapped sweep (``fleet.py``) consumes the exact
+same random stream as the per-problem sweep and returns bit-identical
+chains.
+
 ``propagate_jax`` is the dynamic-cut port of ``Backend.propagate``: scope
 anchors are recomputed from the cut bitmask per candidate, so the same
-traced program serves any partitioning.
+traced program serves any partitioning; scan groups and internal-rows
+anchors are array data (not trace structure), which is what lets one
+executable serve every architecture in a fleet bucket.
+
+``TRACE_COUNTS`` ticks once per *trace* of each jitted entry point — the
+zero-host-round-trip tests assert a multi-sweep SA run traces exactly once
+and re-runs without retracing.
 """
 from __future__ import annotations
 
@@ -47,6 +62,13 @@ from repro.core.optimizers.common import OptimResult
 VARS = ("s_in", "s_out", "kern")
 _DIMS = {"s_in": "rows", "s_out": "col_div", "kern": "batch"}
 
+#: incremented inside jitted function bodies — i.e. once per TRACE, not per
+#: call. tests/test_accel_engine.py uses this to assert the device SA sweep
+#: (including its repair path) runs as one jitted program with zero host
+#: round-trips.
+TRACE_COUNTS = {"sa_sweeps": 0, "bf_chunk": 0,
+                "fleet_sa_sweeps": 0, "fleet_bf_chunk": 0}
+
 
 def _pow2ceil(x: int) -> int:
     p = 1
@@ -66,12 +88,13 @@ def propagate_jax(static: StaticSpec, A: DeviceArrays, si, so, kk, cb,
     Anchors (scan-group first member, partition first node, partition first
     non-internal node) are gathered from the pre-mutation arrays, matching
     the host's copy-then-assign order. ``single_partition`` promises cb is
-    all-False at trace time, collapsing every anchor to a static index.
+    all-False at trace time, collapsing the partition ids to a constant.
     """
     n = static.n_nodes
     C = si.shape[0]
     idt = A.batch.dtype
     one = jnp.ones((), idt)
+    iota = jnp.arange(n, dtype=idt)
     if not single_partition:
         pid = jnp.concatenate(
             [jnp.zeros((C, 1), idt), jnp.cumsum(cb.astype(idt), axis=1)],
@@ -79,35 +102,36 @@ def propagate_jax(static: StaticSpec, A: DeviceArrays, si, so, kk, cb,
 
     if static.scan_tying:
         # harmonise scan-group folds within each partition: for member a the
-        # anchor is the first member b with pid[b] == pid[a] (pid is monotone
-        # and members ascend, so that b is the group's first member in a's
-        # partition).
-        for members in static.scan_groups:
-            m = np.asarray(members)
-            if single_partition:
-                si = si.at[:, m].set(si[:, m[0]][:, None])
-                so = so.at[:, m].set(so[:, m[0]][:, None])
-                kk = kk.at[:, m].set(kk[:, m[0]][:, None])
-                continue
-            pid_m = pid[:, m]
-            eq = pid_m[:, :, None] == pid_m[:, None, :]
-            anchor = jnp.argmax(eq, axis=2)
-            si = si.at[:, m].set(jnp.take_along_axis(si[:, m], anchor, 1))
-            so = so.at[:, m].set(jnp.take_along_axis(so[:, m], anchor, 1))
-            kk = kk.at[:, m].set(jnp.take_along_axis(kk[:, m], anchor, 1))
+        # anchor is the first member b with pid[b] == pid[a] (pid is
+        # monotone and members ascend, so that b is the group's first
+        # member in a's partition). Non-members anchor to themselves.
+        sg = A.scan_group
+        grp = (sg[:, None] == sg[None, :]) & (sg[:, None] >= 0)   # [n, n]
+        if single_partition:
+            ok = jnp.broadcast_to(grp[None, :, :], (C, n, n))
+        else:
+            ok = grp[None, :, :] & (pid[:, :, None] == pid[:, None, :])
+        anchor = jnp.argmax(ok, axis=2).astype(idt)
+        anchor = jnp.where(sg[None, :] >= 0, anchor,
+                           jnp.broadcast_to(iota[None, :], (C, n)))
+        si = jnp.take_along_axis(si, anchor, 1)
+        so = jnp.take_along_axis(so, anchor, 1)
+        kk = jnp.take_along_axis(kk, anchor, 1)
 
     if static.intra_matching:
         so = jnp.where(A.elementwise[None, :], si, so)
 
     if static.inter_matching:
-        iota = jnp.arange(n, dtype=idt)
         if single_partition:
             anchor_k = kk[:, 0][:, None]
-            # i_int holds exactly the internal-rows node indices, so the
-            # partition's first non-internal node is a static index
-            non_int = [j for j in range(n) if j not in static.i_int]
-            anchor_si = si[:, non_int[0]][:, None] if non_int \
-                else jnp.ones((C, 1), idt)
+            # partition's first non-internal node (padded columns are
+            # non-internal with fold 1, so an all-internal real graph
+            # anchors at fold 1 either way — the host's fallback value)
+            f1 = jnp.where(A.internal, n, iota)
+            ni = jnp.argmin(f1)
+            anchor_si = jnp.where(
+                jnp.min(f1) < n,
+                jnp.take(si, ni, axis=1), one)[:, None]
         else:
             is_start = jnp.concatenate([jnp.ones((C, 1), bool), cb], axis=1)
             start_idx = jax.lax.cummax(
@@ -130,6 +154,28 @@ def propagate_jax(static: StaticSpec, A: DeviceArrays, si, so, kk, cb,
         if static.intra_matching:
             so = jnp.where(A.elementwise[None, :], si, so)
     return si, so, kk
+
+
+def repair_jax(static: StaticSpec, A: DeviceArrays, kv_fix, si, so, kk, cb):
+    """On-device feasibility repair: one masked clamp-and-propagate step.
+
+    Strict-KV backends can propose s_out values that a tying-scope scatter
+    clamped legally for the drawn node but that exceed another node's KV
+    head limit (Eq. 8 side constraint). The host engines round-trip such
+    proposals through ``Problem.evaluate`` and reject; here the violating
+    columns clamp to ``kv_fix`` (the node's largest menu value <= its KV
+    limit, host-precomputed) and ONE ``propagate_jax`` pass restores the
+    backend's tying/matching invariants — tied scopes share kind and KV
+    limit, so every member of a violating scope clamps to the same value
+    and the propagated design stays consistent. Entirely traced: the SA
+    sweep never leaves the device to repair a move.
+    """
+    if not static.strict_kv:
+        return si, so, kk
+    kvl = A.kv_limit
+    viol = (kvl[None, :] > 0) & (so > kvl[None, :])
+    so = jnp.where(viol, kv_fix[None, :].astype(so.dtype), so)
+    return propagate_jax(static, A, si, so, kk, cb)
 
 
 # ----------------------------------------------------------------------
@@ -232,38 +278,111 @@ def _construction_tables(graph, backend, slots, scopes, tabs_py, menus,
     return sigma, T
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1, 2))
-def _bf_chunk(static: StaticSpec, B: int, no_cut: bool,
-              A: DeviceArrays, desc, sigma, T, cb_row, take):
-    """Decode + evaluate one enumeration chunk of B candidates on device.
+def chunk_descriptor(strides, sizes, produced: int, take: int,
+                     s_pad: int, idt) -> np.ndarray:
+    """Host-side mixed-radix descriptor for one enumeration chunk.
+
+    One row per decision slot, padded to ``s_pad`` rows (padded rows
+    decode to digit 0 — see ``_bf_decode_digits``). Shared by the
+    per-problem engine and the fleet so the subtle slow-slot carry term
+    can never drift between them (their bit-identity depends on it).
+    """
+    desc = np.zeros((s_pad, 4), idt)
+    desc[:, 0] = 1
+    desc[:, 2] = 1
+    desc[:, 3] = 1
+    for s in range(len(sizes)):
+        stride, size = strides[s], sizes[s]
+        if stride >= take:
+            # slow slot: at most one digit boundary inside the chunk
+            q, r = divmod(produced, stride)
+            desc[s] = (0, q % size, min(stride - r, take + 1), size)
+        else:
+            # fast slot: the digit is periodic with period stride*size
+            # (small, since stride < take <= chunk)
+            desc[s] = (1, produced % (stride * size), stride, size)
+    return desc
+
+
+def absorb_improvements(objs: np.ndarray, best_obj: float, points: int,
+                        history: List[Tuple[int, float]]):
+    """Exact scalar-engine history bookkeeping for one evaluated chunk:
+    record every strict improvement over the running best, in enumeration
+    order. Returns (row of the last improvement or None, new best).
+    Shared by the per-problem engine and the fleet."""
+    prefix = np.minimum.accumulate(
+        np.concatenate(([best_obj], objs)))[:-1]
+    imp = np.nonzero(objs < prefix)[0]
+    for r in imp:
+        history.append((points + int(r) + 1, float(objs[r])))
+    if len(imp):
+        return int(imp[-1]), float(objs[imp[-1]])
+    return None, best_obj
+
+
+def _bf_decode_digits(B: int, idt, desc):
+    """Per-slot digits of a chunk, [B, S+1] (last column: the sentinel
+    slot, always digit 0).
 
     ``desc[s] = (kind, a, b, size)``: for a slow slot (stride >= chunk) the
     digit is ``(a + (off >= b)) % size`` (one carry inside the chunk, at
     offset ``b``); for a fast slot it is ``((a + off) // b) % size``. The
     host reduced the global index modulo stride/period BEFORE building the
     descriptor, so everything here fits 32 bits even for > 2^63 spaces.
-    Construction is three gathers through the precomputed propagation
-    tables (see ``_construction_tables``); no on-device propagation.
     """
+    off = jnp.arange(B, dtype=idt)
+    kind, a, b, size = desc[:, 0], desc[:, 1], desc[:, 2], desc[:, 3]
+    digit_slow = (a[None, :]
+                  + (off[:, None] >= b[None, :]).astype(idt)) % size[None, :]
+    digit_fast = ((a[None, :] + off[:, None])
+                  // jnp.maximum(b[None, :], 1)) % size[None, :]
+    digits = jnp.where(kind[None, :] == 1, digit_fast,
+                       digit_slow)                             # [B, S]
+    return jnp.concatenate(
+        [digits, jnp.zeros((B, 1), idt)], axis=1)              # sentinel
+
+
+def _bf_eval_part(static: StaticSpec, B: int, no_cut: bool,
+                  A: DeviceArrays, si, so, kk, cb_row, take):
+    """Evaluate one decoded chunk; shared VERBATIM by the per-problem jit
+    and the fleet vmap, which (with the decode being exact integer
+    arithmetic) makes their per-problem results bit-identical."""
     n = static.n_nodes
     idt = A.batch.dtype
     off = jnp.arange(B, dtype=idt)
-    kind, a, b, size = desc[:, 0:1], desc[:, 1:2], desc[:, 2:3], desc[:, 3:4]
-    digit_slow = (a + (off[None, :] >= b).astype(idt)) % size
-    digit_fast = ((a + off[None, :]) // jnp.maximum(b, 1)) % size
-    digits = jnp.where(kind == 1, digit_fast, digit_slow)      # [S, B]
-    digits = jnp.concatenate(
-        [digits, jnp.zeros((1, B), idt)], axis=0)              # sentinel
-    iota_n = jnp.arange(n, dtype=idt)
-    si = T[0][iota_n[:, None], digits[sigma[0]]].T             # [B, n]
-    so = T[1][iota_n[:, None], digits[sigma[1]]].T
-    kk = T[2][iota_n[:, None], digits[sigma[2]]].T
     cb = jnp.broadcast_to(cb_row[None, :], (B, max(n - 1, 0)))
     res = _eval_core(static, A, si, so, kk, cb, single_partition=no_cut)
     objs = jnp.where(res["feasible"] & (off < take), res["objective"],
                      jnp.inf)
     r = jnp.argmin(objs)
     return objs, si[r], so[r], kk[r]
+
+
+def _bf_chunk_core(static: StaticSpec, B: int, no_cut: bool,
+                   A: DeviceArrays, desc, sigma, T, cb_row, take):
+    """Decode + evaluate one enumeration chunk of B candidates on device.
+
+    Construction is three gathers through the precomputed propagation
+    tables (see ``_construction_tables``); no on-device propagation. The
+    fleet engine uses the same digit/value arithmetic with the problem
+    axis flattened into the gather index space (batched gathers scalarise
+    on CPU; flat gathers do not) — see ``fleet._fleet_bf_chunk``.
+    """
+    n = static.n_nodes
+    idt = A.batch.dtype
+    digits = _bf_decode_digits(B, idt, desc).T                 # [S+1, B]
+    iota_n = jnp.arange(n, dtype=idt)
+    si = T[0][iota_n[:, None], digits[sigma[0]]].T             # [B, n]
+    so = T[1][iota_n[:, None], digits[sigma[1]]].T
+    kk = T[2][iota_n[:, None], digits[sigma[2]]].T
+    return _bf_eval_part(static, B, no_cut, A, si, so, kk, cb_row, take)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2))
+def _bf_chunk(static: StaticSpec, B: int, no_cut: bool,
+              A: DeviceArrays, desc, sigma, T, cb_row, take):
+    TRACE_COUNTS["bf_chunk"] += 1
+    return _bf_chunk_core(static, B, no_cut, A, desc, sigma, T, cb_row, take)
 
 
 def brute_force_jax(problem, include_cuts: bool, max_cuts: int,
@@ -331,31 +450,16 @@ def brute_force_jax(problem, include_cuts: bool, max_cuts: int,
             if take <= 0:
                 stop = True
                 break
-            desc = np.zeros((len(slots), 4), idt)
-            for s in range(len(slots)):
-                stride, size = strides[s], sizes[s]
-                if stride >= take:
-                    # slow slot: at most one digit boundary inside the chunk
-                    q, r = divmod(produced, stride)
-                    desc[s] = (0, q % size, min(stride - r, take + 1), size)
-                else:
-                    # fast slot: the digit is periodic with period
-                    # stride*size (small, since stride < take <= B)
-                    desc[s] = (1, produced % (stride * size), stride, size)
+            desc = chunk_descriptor(strides, sizes, produced, take,
+                                    len(slots), idt)
             objs, bi_si, bi_so, bi_kk = _bf_chunk(
                 static, B, not cuts, A, jnp.asarray(desc),
                 sigma_d, T_d, cb_row_d, take)
             objs = np.asarray(objs[:take], np.float64)
             problem.note_batch_evals(take)
-            # exact scalar-engine history: every strict improvement over the
-            # running best, in enumeration order
-            prefix = np.minimum.accumulate(
-                np.concatenate(([best_obj], objs)))[:-1]
-            imp = np.nonzero(objs < prefix)[0]
-            for r in imp:
-                history.append((points + int(r) + 1, float(objs[r])))
-            if len(imp):
-                best_obj = float(objs[imp[-1]])
+            last_imp, best_obj = absorb_improvements(objs, best_obj,
+                                                     points, history)
+            if last_imp is not None:
                 best_v = Variables(
                     tuple(int(e) for e in np.nonzero(cb_row)[0]),
                     tuple(int(x) for x in np.asarray(bi_si)),
@@ -383,69 +487,114 @@ def brute_force_jax(problem, include_cuts: bool, max_cuts: int,
 # multi-chain simulated annealing, one lax.scan sweep loop on device
 # ----------------------------------------------------------------------
 
+def build_sa_tables(problem, *, pad_nodes: Optional[int] = None,
+                    pad_menu: Optional[int] = None):
+    """Host-precomputed move tables for the device SA sweep.
+
+    Returns numpy arrays (menus [3, n, mm], menu_sizes [3, n], clamp
+    [3, n, max_val+1], kv_fix [n]) plus the backend's granularity triple
+    and cut-edge flag. ``pad_nodes``/``pad_menu`` pad the node / menu axes
+    with neutral single-value menus so fleet buckets can stack problems of
+    different sizes (padded nodes are never drawn: the sweep bounds its
+    node draw by ``DeviceArrays.n_valid``).
+    """
+    graph, backend, platform = \
+        problem.graph, problem.backend, problem.platform
+    n = len(graph.nodes)
+    n_pad = n if pad_nodes is None else int(pad_nodes)
+
+    max_val = max(platform.fold_values())
+    menu_lists = {}
+    max_menu = 1
+    for vi, var in enumerate(VARS):
+        for j in range(n):
+            cands = backend.candidates(graph, j, var, platform)
+            menu_lists[(vi, j)] = cands
+            max_menu = max(max_menu, len(cands))
+    if pad_menu is not None:
+        if pad_menu < max_menu:
+            raise ValueError(f"pad_menu={pad_menu} < menu size {max_menu}")
+        max_menu = int(pad_menu)
+    menus = np.ones((3, n_pad, max_menu), np.int64)
+    menu_sizes = np.ones((3, n_pad), np.int64)
+    for (vi, j), cands in menu_lists.items():
+        menus[vi, j, :len(cands)] = cands
+        menu_sizes[vi, j] = len(cands)
+    # clamp[var, node, v] = set_fold's divisor walk-down of value v
+    clamp = np.ones((3, n_pad, max_val + 1), np.int64)
+    for vi, var in enumerate(VARS):
+        for j in range(n):
+            dim = getattr(graph.nodes[j], _DIMS[var])
+            for v in range(max_val + 1):
+                val = v
+                while val > 1 and dim % val != 0:
+                    val -= 1
+                clamp[vi, j, v] = val
+    # kv_fix[j]: largest s_out menu value within the node's KV limit — the
+    # on-device repair target for strict-KV violations (see repair_jax)
+    kv_fix = np.ones(n_pad, np.int64)
+    for j in range(n):
+        kvl = graph.nodes[j].kv_limit
+        if kvl > 0:
+            legal = [c for c in menu_lists[(1, j)] if c <= kvl]
+            kv_fix[j] = max(legal) if legal else 1
+    gran = tuple(backend.granularity[var] for var in VARS)
+    return menus, menu_sizes, clamp, kv_fix, gran, \
+        bool(len(graph.cut_edges) > 0)
+
+
 class DeviceSA:
     """Device-resident multi-chain SA: move tables + the jitted sweep loop.
 
     One instance per Problem; ``run`` advances a chain-state pytree by
     ``n_sweeps`` sweeps and is resumable (the host can interleave calls
     with wall-clock budget checks). Incumbents are tracked per chain on
-    device and read back with ``best_variables``.
+    device and read back with ``best_variables``. The whole sweep —
+    proposal, on-device repair, evaluation, Metropolis, incumbent update —
+    is one ``lax.scan`` program: zero host round-trips mid-run.
     """
 
-    def __init__(self, problem):
+    def __init__(self, problem, *, pad_nodes: Optional[int] = None,
+                 pad_menu: Optional[int] = None,
+                 pad_pairs: Optional[int] = None, tables=None):
         self.problem = problem
-        self.jev = JaxEvaluator.from_problem(problem)
+        self.jev = JaxEvaluator.from_problem(problem, pad_nodes=pad_nodes,
+                                             pad_pairs=pad_pairs)
         self.static, self.A = self.jev.static, self.jev.arrays
-        graph, backend, platform = \
-            problem.graph, problem.backend, problem.platform
-        n = len(graph.nodes)
+        self.n_real = len(problem.graph.nodes)
         idt = np.int64 if self.A.batch.dtype == jnp.int64 else np.int32
-
-        max_val = max(platform.fold_values())
-        menu_lists = {}
-        max_menu = 1
-        for vi, var in enumerate(VARS):
-            for j in range(n):
-                cands = backend.candidates(graph, j, var, platform)
-                menu_lists[(vi, j)] = cands
-                max_menu = max(max_menu, len(cands))
-        menus = np.ones((3, n, max_menu), idt)
-        menu_sizes = np.ones((3, n), idt)
-        for (vi, j), cands in menu_lists.items():
-            menus[vi, j, :len(cands)] = cands
-            menu_sizes[vi, j] = len(cands)
-        # clamp[var, node, v] = set_fold's divisor walk-down of value v
-        clamp = np.ones((3, n, max_val + 1), idt)
-        for vi, var in enumerate(VARS):
-            for j in range(n):
-                dim = getattr(graph.nodes[j], _DIMS[var])
-                for v in range(max_val + 1):
-                    val = v
-                    while val > 1 and dim % val != 0:
-                        val -= 1
-                    clamp[vi, j, v] = val
-        self.menus = jnp.asarray(menus)
-        self.menu_sizes = jnp.asarray(menu_sizes)
-        self.clamp = jnp.asarray(clamp)
-        self.gran = tuple(backend.granularity[var] for var in VARS)
-        self.has_cut_edges = bool(len(graph.cut_edges) > 0)
+        if tables is None:
+            tables = build_sa_tables(problem, pad_nodes=self.static.n_nodes,
+                                     pad_menu=pad_menu)
+        menus, menu_sizes, clamp, kv_fix, gran, has_cuts = tables
+        self.menus = jnp.asarray(menus, idt)
+        self.menu_sizes = jnp.asarray(menu_sizes, idt)
+        self.clamp = jnp.asarray(clamp, idt)
+        self.kv_fix = jnp.asarray(kv_fix, idt)
+        self.gran = gran
+        self.has_cut_edges = has_cuts
 
     # ------------------------------------------------------------------
     def init_state(self, v0: Variables, ev0, chains: int, seed: int):
         n = self.static.n_nodes
         idt = self.A.batch.dtype
+        pad = n - self.n_real
+        av = lambda t: np.pad(np.asarray(t, np.int64), (0, pad),
+                              constant_values=1)
         si = jnp.broadcast_to(
-            jnp.asarray(np.array(v0.s_in), idt)[None, :], (chains, n))
+            jnp.asarray(av(v0.s_in), idt)[None, :], (chains, n))
         so = jnp.broadcast_to(
-            jnp.asarray(np.array(v0.s_out), idt)[None, :], (chains, n))
+            jnp.asarray(av(v0.s_out), idt)[None, :], (chains, n))
         kk = jnp.broadcast_to(
-            jnp.asarray(np.array(v0.kern), idt)[None, :], (chains, n))
+            jnp.asarray(av(v0.kern), idt)[None, :], (chains, n))
         cb_row = np.zeros(max(n - 1, 0), bool)
         for c in v0.cuts:
             cb_row[c] = True
         cb = jnp.broadcast_to(jnp.asarray(cb_row)[None, :],
                               (chains, max(n - 1, 0)))
-        obj = jnp.full((chains,), float(ev0.objective))
+        # commit the dtype explicitly: a weak-typed float here would retrace
+        # the sweep program on the first resume (tests assert one trace)
+        obj = jnp.full((chains,), float(ev0.objective), self.A.flops.dtype)
         feas = jnp.full((chains,), bool(ev0.feasible))
         return {
             "si": si, "so": so, "kk": kk, "cb": cb,
@@ -459,15 +608,17 @@ class DeviceSA:
             n_sweeps: int):
         return _sa_sweeps(self.static, self.gran, self.has_cut_edges,
                           n_sweeps, self.A, self.menus, self.menu_sizes,
-                          self.clamp, state, temps, scale, cooling, k_min)
+                          self.clamp, self.kv_fix, state, temps, scale,
+                          cooling, k_min)
 
     # ------------------------------------------------------------------
     def best_variables(self, state):
         """Per-chain incumbents as host ``Variables`` + (objective, feasible)."""
-        si = np.asarray(state["best_si"])
-        so = np.asarray(state["best_so"])
-        kk = np.asarray(state["best_kk"])
-        cb = np.asarray(state["best_cb"])
+        nr = self.n_real
+        si = np.asarray(state["best_si"])[:, :nr]
+        so = np.asarray(state["best_so"])[:, :nr]
+        kk = np.asarray(state["best_kk"])[:, :nr]
+        cb = np.asarray(state["best_cb"])[:, :max(nr - 1, 0)]
         objs = np.asarray(state["best_obj"], np.float64)
         feas = np.asarray(state["best_feas"], bool)
         out = []
@@ -481,132 +632,162 @@ class DeviceSA:
 
 
 def _masked_choice(key, mask):
-    """Uniform index among True entries per row (argmax of masked iid
-    uniforms); rows with an empty mask return 0 — callers gate on count."""
-    g = jax.random.uniform(key, mask.shape)
-    return jnp.argmax(jnp.where(mask, g, -1.0), axis=1)
+    """Uniform index among True entries per row.
+
+    Draws ONE uniform per row and selects the k-th True entry via a
+    cumulative count — the draw shape is [rows], independent of the
+    (possibly padded) column count, so fleet and per-problem sweeps
+    consume identical random streams. Rows with an empty mask return 0 —
+    callers gate on the count.
+    """
+    C = mask.shape[0]
+    u = jax.random.uniform(key, (C,))
+    cnt = mask.sum(axis=1)
+    k = jnp.minimum(jnp.floor(u * cnt).astype(cnt.dtype),
+                    jnp.maximum(cnt - 1, 0))
+    cum = jnp.cumsum(mask.astype(cnt.dtype), axis=1)
+    return jnp.argmax((cum == (k + 1)[:, None]) & mask, axis=1)
+
+
+def _sa_sweep_step(static: StaticSpec, gran: Tuple[str, str, str],
+                   has_cut_edges: bool, A: DeviceArrays, menus, menu_sizes,
+                   clamp, kv_fix, scale, cooling, k_min, carry, _):
+    """One SA sweep for all chains: propose, repair, evaluate, accept."""
+    n = static.n_nodes
+    idt = A.batch.dtype
+    iota_n = jnp.arange(n, dtype=idt)
+    st, temps = carry
+    key, kt, kc1, kc2, kc3, kn, km, kacc = \
+        jax.random.split(st["key"], 8)
+    si, so, kk, cb = st["si"], st["so"], st["kk"], st["cb"]
+    C = si.shape[0]
+
+    # ---------------- cut proposal --------------------------------
+    if has_cut_edges:
+        removable = cb
+        addable = A.cut_allowed[None, :] & ~cb
+        n_rem = removable.sum(axis=1)
+        n_add = addable.sum(axis=1)
+        r2 = jax.random.uniform(kc1, (C,))
+        do_rem = (r2 < 0.45) & (n_rem > 0)
+        do_add = ~do_rem & (r2 < 0.9) & (n_add > 0)
+        do_move = ~do_rem & ~do_add & (n_rem > 0) & (n_add > 0)
+        rem_i = _masked_choice(kc2, removable)
+        add_i = _masked_choice(kc3, addable)
+        E = cb.shape[1]
+        oh_rem = jnp.arange(E)[None, :] == rem_i[:, None]
+        oh_add = jnp.arange(E)[None, :] == add_i[:, None]
+        cb_cut = cb & ~(oh_rem & (do_rem | do_move)[:, None])
+        cb_cut = cb_cut | (oh_add & (do_add | do_move)[:, None])
+    else:
+        cb_cut = cb
+
+    # ---------------- fold proposal (joint triple redraw) ---------
+    i = jax.random.randint(kn, (C,), 0, A.n_valid)
+    draws = jax.random.randint(km, (8, 3, C), 0, 1 << 30)
+    sizes_i = menu_sizes[:, i]                       # [3, C]
+    mi = draws % sizes_i[None, :, :]                 # [8, 3, C]
+    vals = menus[jnp.arange(3)[None, :, None],
+                 i[None, None, :], mi]               # [8, 3, C]
+    lut, cap = A.val_lut, static.val_cap
+    iv = lut[jnp.minimum(vals, cap)]
+    known = (iv >= 0).all(axis=1)
+    ok = known & A.real_table[jnp.maximum(iv[:, 0], 0),
+                              jnp.maximum(iv[:, 1], 0),
+                              jnp.maximum(iv[:, 2], 0)]
+    sel = jnp.where(ok.any(axis=0), jnp.argmax(ok, axis=0), 7)
+    v3 = jnp.take_along_axis(vals, sel[None, None, :], 0)[0]   # [3, C]
+
+    pid = jnp.concatenate(
+        [jnp.zeros((C, 1), idt), jnp.cumsum(cb.astype(idt), axis=1)],
+        axis=1)
+    pid_i = jnp.take_along_axis(pid, i[:, None], 1)
+    same_part = pid == pid_i
+    sg_i = A.scan_group[i]
+    oh_i = iota_n[None, :] == i[:, None]
+    fold = {"s_in": si, "s_out": so, "kern": kk}
+    for vi, var in enumerate(VARS):
+        g = gran[vi]
+        if g == "global":
+            m = same_part
+        elif g == "group":
+            m = jnp.where(sg_i[:, None] >= 0,
+                          same_part
+                          & (A.scan_group[None, :] == sg_i[:, None]),
+                          oh_i)
+        else:
+            m = oh_i
+        if var == "s_in" and g == "global":
+            m = m & ~A.internal[None, :]     # decode split-KV keeps s_I
+        clamped = clamp[vi][iota_n[None, :], v3[vi][:, None]]
+        fold[var] = jnp.where(m, clamped, fold[var])
+    p_si, p_so, p_kk = propagate_jax(static, A, fold["s_in"],
+                                     fold["s_out"], fold["kern"], cb)
+    # on-device repair: masked clamp-and-propagate (no host round-trip)
+    p_si, p_so, p_kk = repair_jax(static, A, kv_fix, p_si, p_so, p_kk, cb)
+
+    # ---------------- select + evaluate ---------------------------
+    r_type = jax.random.uniform(kt, (C,))
+    is_cut = (r_type < 0.25) if has_cut_edges \
+        else jnp.zeros((C,), bool)
+    p_si = jnp.where(is_cut[:, None], si, p_si)
+    p_so = jnp.where(is_cut[:, None], so, p_so)
+    p_kk = jnp.where(is_cut[:, None], kk, p_kk)
+    p_cb = jnp.where(is_cut[:, None], cb_cut, cb)
+    res = _eval_core(static, A, p_si, p_so, p_kk, p_cb)
+    p_obj = res["objective"].astype(st["obj"].dtype)
+    p_feas = res["feasible"]
+
+    # ---------------- Metropolis (Eq. 11) -------------------------
+    u = jax.random.uniform(kacc, (C,))
+    delta = (st["obj"] - p_obj) / scale
+    psi = jnp.exp(jnp.minimum(0.0, delta / temps))
+    accept = p_feas & (psi >= u)
+    acc2 = accept[:, None]
+    st = dict(st)
+    st["si"] = jnp.where(acc2, p_si, si)
+    st["so"] = jnp.where(acc2, p_so, so)
+    st["kk"] = jnp.where(acc2, p_kk, kk)
+    st["cb"] = jnp.where(acc2, p_cb, cb)
+    st["obj"] = jnp.where(accept, p_obj, st["obj"])
+    st["feas"] = jnp.where(accept, p_feas, st["feas"])
+
+    # incumbents consider every proposal, accepted or not (a feasible
+    # evaluation always beats an infeasible incumbent)
+    better = (p_feas & ~st["best_feas"]) \
+        | ((p_feas == st["best_feas"]) & (p_obj < st["best_obj"]))
+    b2 = better[:, None]
+    st["best_si"] = jnp.where(b2, p_si, st["best_si"])
+    st["best_so"] = jnp.where(b2, p_so, st["best_so"])
+    st["best_kk"] = jnp.where(b2, p_kk, st["best_kk"])
+    st["best_cb"] = jnp.where(b2, p_cb, st["best_cb"])
+    st["best_obj"] = jnp.where(better, p_obj, st["best_obj"])
+    st["best_feas"] = st["best_feas"] | p_feas
+    st["key"] = key
+    temps = jnp.maximum(k_min, temps * cooling)   # lockstep ladder cool
+    return (st, temps), (st["best_obj"], st["best_feas"])
+
+
+def _sa_scan(static: StaticSpec, gran, has_cut_edges: bool, n_sweeps: int,
+             A, menus, menu_sizes, clamp, kv_fix, state, temps, scale,
+             cooling, k_min):
+    """Un-jitted scan driver shared by the per-problem jit and the fleet
+    vmap; returns (state, temps, traces)."""
+    step = functools.partial(_sa_sweep_step, static, gran, has_cut_edges,
+                             A, menus, menu_sizes, clamp, kv_fix,
+                             scale, cooling, k_min)
+    (state, temps), traces = jax.lax.scan(
+        step, (state, temps), None, length=n_sweeps)
+    return state, temps, traces
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1, 2, 3))
 def _sa_sweeps(static: StaticSpec, gran: Tuple[str, str, str],
                has_cut_edges: bool, n_sweeps: int,
-               A: DeviceArrays, menus, menu_sizes, clamp,
+               A: DeviceArrays, menus, menu_sizes, clamp, kv_fix,
                state, temps, scale, cooling, k_min):
     """Advance all chains by ``n_sweeps``; returns (state, temps, traces)."""
-    n = static.n_nodes
-    idt = A.batch.dtype
-    iota_n = jnp.arange(n, dtype=idt)
-
-    def sweep(carry, _):
-        st, temps = carry
-        key, kt, kc1, kc2, kc3, kn, km, kacc = \
-            jax.random.split(st["key"], 8)
-        si, so, kk, cb = st["si"], st["so"], st["kk"], st["cb"]
-        C = si.shape[0]
-
-        # ---------------- cut proposal --------------------------------
-        if has_cut_edges:
-            removable = cb
-            addable = A.cut_allowed[None, :] & ~cb
-            n_rem = removable.sum(axis=1)
-            n_add = addable.sum(axis=1)
-            r2 = jax.random.uniform(kc1, (C,))
-            do_rem = (r2 < 0.45) & (n_rem > 0)
-            do_add = ~do_rem & (r2 < 0.9) & (n_add > 0)
-            do_move = ~do_rem & ~do_add & (n_rem > 0) & (n_add > 0)
-            rem_i = _masked_choice(kc2, removable)
-            add_i = _masked_choice(kc3, addable)
-            E = cb.shape[1]
-            oh_rem = jnp.arange(E)[None, :] == rem_i[:, None]
-            oh_add = jnp.arange(E)[None, :] == add_i[:, None]
-            cb_cut = cb & ~(oh_rem & (do_rem | do_move)[:, None])
-            cb_cut = cb_cut | (oh_add & (do_add | do_move)[:, None])
-        else:
-            cb_cut = cb
-
-        # ---------------- fold proposal (joint triple redraw) ---------
-        i = jax.random.randint(kn, (C,), 0, n)
-        draws = jax.random.randint(km, (8, 3, C), 0, 1 << 30)
-        sizes_i = menu_sizes[:, i]                       # [3, C]
-        mi = draws % sizes_i[None, :, :]                 # [8, 3, C]
-        vals = menus[jnp.arange(3)[None, :, None],
-                     i[None, None, :], mi]               # [8, 3, C]
-        lut, cap = A.val_lut, static.val_cap
-        iv = lut[jnp.minimum(vals, cap)]
-        known = (iv >= 0).all(axis=1)
-        ok = known & A.real_table[jnp.maximum(iv[:, 0], 0),
-                                  jnp.maximum(iv[:, 1], 0),
-                                  jnp.maximum(iv[:, 2], 0)]
-        sel = jnp.where(ok.any(axis=0), jnp.argmax(ok, axis=0), 7)
-        v3 = jnp.take_along_axis(vals, sel[None, None, :], 0)[0]   # [3, C]
-
-        pid = jnp.concatenate(
-            [jnp.zeros((C, 1), idt), jnp.cumsum(cb.astype(idt), axis=1)],
-            axis=1)
-        pid_i = jnp.take_along_axis(pid, i[:, None], 1)
-        same_part = pid == pid_i
-        sg_i = A.scan_group[i]
-        oh_i = iota_n[None, :] == i[:, None]
-        fold = {"s_in": si, "s_out": so, "kern": kk}
-        for vi, var in enumerate(VARS):
-            g = gran[vi]
-            if g == "global":
-                m = same_part
-            elif g == "group":
-                m = jnp.where(sg_i[:, None] >= 0,
-                              same_part
-                              & (A.scan_group[None, :] == sg_i[:, None]),
-                              oh_i)
-            else:
-                m = oh_i
-            if var == "s_in" and g == "global":
-                m = m & ~A.internal[None, :]     # decode split-KV keeps s_I
-            clamped = clamp[vi][iota_n[None, :], v3[vi][:, None]]
-            fold[var] = jnp.where(m, clamped, fold[var])
-        p_si, p_so, p_kk = propagate_jax(static, A, fold["s_in"],
-                                         fold["s_out"], fold["kern"], cb)
-
-        # ---------------- select + evaluate ---------------------------
-        r_type = jax.random.uniform(kt, (C,))
-        is_cut = (r_type < 0.25) if has_cut_edges \
-            else jnp.zeros((C,), bool)
-        p_si = jnp.where(is_cut[:, None], si, p_si)
-        p_so = jnp.where(is_cut[:, None], so, p_so)
-        p_kk = jnp.where(is_cut[:, None], kk, p_kk)
-        p_cb = jnp.where(is_cut[:, None], cb_cut, cb)
-        res = _eval_core(static, A, p_si, p_so, p_kk, p_cb)
-        p_obj = res["objective"].astype(st["obj"].dtype)
-        p_feas = res["feasible"]
-
-        # ---------------- Metropolis (Eq. 11) -------------------------
-        u = jax.random.uniform(kacc, (C,))
-        delta = (st["obj"] - p_obj) / scale
-        psi = jnp.exp(jnp.minimum(0.0, delta / temps))
-        accept = p_feas & (psi >= u)
-        acc2 = accept[:, None]
-        st = dict(st)
-        st["si"] = jnp.where(acc2, p_si, si)
-        st["so"] = jnp.where(acc2, p_so, so)
-        st["kk"] = jnp.where(acc2, p_kk, kk)
-        st["cb"] = jnp.where(acc2, p_cb, cb)
-        st["obj"] = jnp.where(accept, p_obj, st["obj"])
-        st["feas"] = jnp.where(accept, p_feas, st["feas"])
-
-        # incumbents consider every proposal, accepted or not (a feasible
-        # evaluation always beats an infeasible incumbent)
-        better = (p_feas & ~st["best_feas"]) \
-            | ((p_feas == st["best_feas"]) & (p_obj < st["best_obj"]))
-        b2 = better[:, None]
-        st["best_si"] = jnp.where(b2, p_si, st["best_si"])
-        st["best_so"] = jnp.where(b2, p_so, st["best_so"])
-        st["best_kk"] = jnp.where(b2, p_kk, st["best_kk"])
-        st["best_cb"] = jnp.where(b2, p_cb, st["best_cb"])
-        st["best_obj"] = jnp.where(better, p_obj, st["best_obj"])
-        st["best_feas"] = st["best_feas"] | p_feas
-        st["key"] = key
-        temps = jnp.maximum(k_min, temps * cooling)   # lockstep ladder cool
-        return (st, temps), (st["best_obj"], st["best_feas"])
-
-    (state, temps), traces = jax.lax.scan(
-        sweep, (state, temps), None, length=n_sweeps)
-    return state, temps, traces
+    TRACE_COUNTS["sa_sweeps"] += 1
+    return _sa_scan(static, gran, has_cut_edges, n_sweeps, A, menus,
+                    menu_sizes, clamp, kv_fix, state, temps, scale,
+                    cooling, k_min)

@@ -22,12 +22,15 @@ Two modes:
 Engines (core/accel registry): the two modes above run on the ``host``
 engines (scalar / numpy). ``engine="jax"`` instead runs the whole sweep
 loop on the accelerator (``core/accel/search_loops.DeviceSA``): move
-proposal, constraint propagation, evaluation, Metropolis acceptance and
-per-chain incumbent tracking are one ``lax.scan`` program, driven by
-``jax.random`` — deterministic for a fixed seed, but a different rng
-stream than the host engines (it is a device-shaped explorer, not a
-bit-identical port; there are no replica exchanges and fold moves always
-redraw the whole triple).
+proposal, on-device feasibility repair (a masked clamp-and-propagate step
+for strict-KV violations — infeasible moves never round-trip to the
+host), evaluation, Metropolis acceptance and per-chain incumbent tracking
+are one ``lax.scan`` program, driven by ``jax.random`` — deterministic
+for a fixed seed, but a different rng stream than the host engines (it is
+a device-shaped explorer, not a bit-identical port; there are no replica
+exchanges and fold moves always redraw the whole triple). Without a time
+budget the entire schedule is ONE jitted call. Portfolios of problems
+vmap the same sweep via ``core/accel/fleet.fleet_annealing``.
 """
 from __future__ import annotations
 
@@ -241,12 +244,18 @@ def _optimise_jax(problem, seed, k_start, k_min, cooling, time_budget_s,
     sweeps = 0
     g_best, g_feas = ev0.objective, ev0.feasible
     while True:
-        # max_iters always caps the sweep count; a time budget alone keeps
-        # running at the K_min floor until the clock expires (host contract)
-        if time_budget_s is not None and max_iters is None:
-            chunk = 128
+        # max_iters always caps the sweep count; a time budget keeps
+        # running at the K_min floor until the clock expires (host
+        # contract) and needs 128-sweep chunks so the clock is actually
+        # checked. Without a time budget the WHOLE schedule runs as one
+        # jitted lax.scan call — proposal, on-device repair, evaluation
+        # and incumbent tracking never round-trip to the host mid-sweep
+        # (asserted via the trace counter in tests/test_accel_engine.py).
+        if time_budget_s is not None:
+            chunk = 128 if max_iters is None \
+                else min(128, total_sweeps - sweeps)
         else:
-            chunk = min(128, total_sweeps - sweeps)
+            chunk = total_sweeps - sweeps
         if chunk <= 0:
             break
         state, temps, (t_obj, t_feas) = sa.run(state, temps, scale,

@@ -5,6 +5,9 @@ This is the public API the launcher and examples call:
     plan = optimise_mapping(arch, shape, platform, backend="spmd",
                             optimiser="rule_based", objective="throughput")
 
+    plans = optimise_portfolio(["tinyllama-1.1b", "llama3.2-1b"], shape,
+                               platform, optimiser="brute_force")
+
 Engine selection
 ----------------
 Every optimiser evaluates candidate designs through one of three engines
@@ -38,7 +41,7 @@ float64 scalar reference.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import List, Optional, Sequence
 
 from repro.configs.base import ArchConfig, ShapeSpec
 from repro.core.backends import BACKENDS
@@ -92,6 +95,71 @@ def optimise_mapping(arch: ArchConfig, shape: ShapeSpec,
     result = OPTIMIZERS[optimiser](problem, **optimiser_kwargs)
     return export_plan(problem.graph, result.variables, platform,
                        exec_model, result.evaluation)
+
+
+def optimise_portfolio(archs: Sequence, shapes,
+                       platform: Platform = V5E_POD,
+                       backend: str = "spmd",
+                       optimiser: str = "brute_force",
+                       objective: str = "throughput",
+                       exec_model: str = "streaming",
+                       opts: Optional[ModelOptions] = None,
+                       engine: str = "auto",
+                       **optimiser_kwargs) -> List[ShardingPlan]:
+    """Optimise a whole portfolio of architectures in one fleet sweep.
+
+    ``archs`` is a sequence of ``ArchConfig``s (or registry names);
+    ``shapes`` is one ``ShapeSpec`` applied to every arch, or a matching
+    sequence. With the ``jax`` engine (the ``auto`` default when jax is
+    installed) the problems are bucketed by trace signature, padded to a
+    common shape and searched by ONE vmapped XLA executable per bucket
+    (``core/accel/fleet.py``) — per-problem optima, objectives and
+    improvement histories are identical to looping
+    ``optimise_mapping(engine="jax")``, at a multiple of its aggregate
+    points/s (``benchmarks/run.py fleet``). Without jax the portfolio
+    degrades to a per-problem loop on the requested host engine.
+
+    Fleet sweeps cover ``optimiser="brute_force"`` (vmapped chunk decode)
+    and ``"annealing"`` (vmapped multi-chain device SA with on-device
+    repair); other optimisers run the per-problem loop. Returns one
+    ``ShardingPlan`` per arch, in input order.
+    """
+    from repro.configs import get_arch
+    from repro.core.accel import resolve_engine
+
+    archs = [get_arch(a) if isinstance(a, str) else a for a in archs]
+    if isinstance(shapes, ShapeSpec):
+        shapes = [shapes] * len(archs)
+    if len(shapes) != len(archs):
+        raise ValueError(f"got {len(archs)} archs but {len(shapes)} shapes")
+    problems = [make_problem(a, s, platform, backend, objective,
+                             exec_model, opts)
+                for a, s in zip(archs, shapes)]
+    eng = resolve_engine(engine, allow_fallback=False)
+    fleet_kw = {
+        "brute_force": {"include_cuts", "max_cuts", "max_points",
+                        "batch_size"},
+        "annealing": {"seed", "k_start", "k_min", "cooling", "max_iters",
+                      "objective_scale", "chains"},
+    }
+    # the fleet covers the kwargs above; anything else (time_budget_s,
+    # swap_interval, ...) routes through the per-problem loop, whose
+    # results the fleet is bit-identical to anyway
+    if eng == "jax" and optimiser in fleet_kw \
+            and set(optimiser_kwargs) <= fleet_kw[optimiser]:
+        from repro.core.accel.fleet import (
+            fleet_annealing,
+            fleet_brute_force,
+        )
+        runner = fleet_brute_force if optimiser == "brute_force" \
+            else fleet_annealing
+        results = runner(problems, **optimiser_kwargs)
+    else:
+        results = [OPTIMIZERS[optimiser](p, engine=eng, **optimiser_kwargs)
+                   for p in problems]
+    return [export_plan(p.graph, r.variables, platform, exec_model,
+                        r.evaluation)
+            for p, r in zip(problems, results)]
 
 
 def baseline_plan(arch: ArchConfig, shape: ShapeSpec,

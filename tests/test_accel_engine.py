@@ -205,6 +205,167 @@ def test_device_sa_per_chain_incumbents():
 
 
 # ----------------------------------------------------------------------
+# padded lowering (the fleet bucketing contract)
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", sorted(BACKENDS))
+def test_padded_lowering_bitwise_identical(backend):
+    """Padding the node axis must be bitwise neutral — the property the
+    fleet engine relies on to stack differently-sized graphs."""
+    prob = _problem("tinyllama-1.1b", TRAIN, backend=backend)
+    designs = _random_designs(prob, 25, seed=9)
+    bev = prob.batched()
+    packed = bev.pack(designs)
+    r0 = JaxEvaluator(bev).evaluate_batch(*packed)
+    rp = JaxEvaluator(bev, pad_nodes=bev.n_nodes + 5).evaluate_batch(*packed)
+    np.testing.assert_array_equal(r0.objective, rp.objective)
+    np.testing.assert_array_equal(r0.feasible, rp.feasible)
+    np.testing.assert_array_equal(r0.part_times, rp.part_times)
+    np.testing.assert_array_equal(r0.node_resident, rp.node_resident)
+    np.testing.assert_array_equal(r0.node_collective, rp.node_collective)
+
+
+# ----------------------------------------------------------------------
+# fleet sweeps (core/accel/fleet.py): vmapped multi-problem search
+# ----------------------------------------------------------------------
+
+def _assert_bf_identical(names, shape=TRAIN, backend="spmd", **kw):
+    from repro.core.accel.fleet import fleet_brute_force
+
+    loop = [brute_force(_problem(n, shape, backend=backend),
+                        engine="jax", **kw) for n in names]
+    fleet = fleet_brute_force([_problem(n, shape, backend=backend)
+                               for n in names], **kw)
+    for n, a, b in zip(names, loop, fleet):
+        assert a.points == b.points, n
+        assert a.variables == b.variables, n
+        assert a.history == b.history, n
+        # both re-derive the evaluation through the float64 scalar
+        # reference, so the reported optima are bit-identical
+        assert a.evaluation.objective == b.evaluation.objective, n
+
+
+def test_fleet_brute_force_identical_to_loop():
+    """Mixed-size portfolio in one bucket: per-problem optimum, point
+    count and improvement history identical to the per-problem engine."""
+    _assert_bf_identical(EXAMPLE_ARCHS[:3], include_cuts=True,
+                         max_points=2000, batch_size=256)
+
+
+@pytest.mark.slow
+def test_fleet_brute_force_all_example_archs():
+    """Acceptance: optimise_portfolio over ALL example archs returns
+    per-problem optima identical to per-problem jax loops."""
+    _assert_bf_identical(EXAMPLE_ARCHS, include_cuts=True,
+                         max_points=1500, batch_size=256)
+
+
+@pytest.mark.parametrize("backend", ["spmd", "megatron"])
+def test_fleet_annealing_identical_to_loop(backend):
+    """Vmapped device SA consumes the identical random stream as the
+    per-problem sweep (chain-shaped draws only), so fleet trajectories are
+    bit-identical — including on strict-KV backends where the on-device
+    repair path is active."""
+    from repro.core.accel.fleet import fleet_annealing
+
+    names = EXAMPLE_ARCHS[:3]
+    kw = dict(seed=11, max_iters=150, chains=3)
+    loop = [simulated_annealing(_problem(n, TRAIN, backend=backend),
+                                engine="jax", **kw) for n in names]
+    fleet = fleet_annealing([_problem(n, TRAIN, backend=backend)
+                             for n in names], **kw)
+    for n, a, b in zip(names, loop, fleet):
+        assert a.variables == b.variables, n
+        assert a.history == b.history, n
+        assert a.evaluation.objective == b.evaluation.objective, n
+
+
+def test_optimise_portfolio_matches_loop_plans():
+    from repro.core.pipeline import optimise_mapping, optimise_portfolio
+
+    archs = [reduced(get_arch(n)) for n in EXAMPLE_ARCHS[:3]]
+    kw = dict(optimiser="brute_force", max_points=1000, batch_size=256)
+    plans = optimise_portfolio(archs, TRAIN, PLAT, **kw)
+    loops = [optimise_mapping(a, TRAIN, PLAT, engine="jax", **kw)
+             for a in archs]
+    for pl, lp in zip(plans, loops):
+        assert pl.objective_value == lp.objective_value
+        assert pl.latency == lp.latency
+        assert pl.throughput == lp.throughput
+        assert [p.node_indices for p in pl.partitions] \
+            == [p.node_indices for p in lp.partitions]
+
+
+# ----------------------------------------------------------------------
+# on-device SA repair: zero host round-trips mid-sweep
+# ----------------------------------------------------------------------
+
+def test_device_sa_zero_host_roundtrips():
+    """The whole sweep — proposal, repair, evaluate, accept — is ONE
+    jitted lax.scan program: exactly one trace for a multi-sweep run, no
+    retrace on resume, and zero host evaluations while it runs."""
+    import jax.numpy as jnp
+    from repro.core.accel import search_loops as sl
+    from repro.core.accel.search_loops import DeviceSA
+    from repro.core.optimizers.common import repair
+
+    prob = _problem("tinyllama-1.1b", TRAIN, backend="megatron")
+    sa = DeviceSA(prob)
+    v0 = repair(prob, prob.backend.initial(prob.graph))
+    ev0 = prob.evaluate(v0)
+    # chains=5 / n_sweeps=41 are unique in the suite, so the executable
+    # cannot have been compiled by an earlier test
+    state = sa.init_state(v0, ev0, chains=5, seed=0)
+    temps = jnp.asarray([1000.0 * (1.6 ** c) for c in range(5)])
+    scale = max(abs(ev0.objective), 1e-12) / 1000.0
+
+    base = sl.TRACE_COUNTS["sa_sweeps"]
+    evals_before = prob.evals_done
+    state, temps, _ = sa.run(state, temps, scale, 0.98, 1.0, n_sweeps=41)
+    jax.block_until_ready(state["obj"])
+    assert sl.TRACE_COUNTS["sa_sweeps"] == base + 1
+    assert prob.evals_done == evals_before     # repair never left the device
+    # resuming with the same shapes reuses the executable: no retrace,
+    # still no host round-trips
+    for _ in range(2):
+        state, temps, _ = sa.run(state, temps, scale, 0.98, 1.0, n_sweeps=41)
+        jax.block_until_ready(state["obj"])
+    assert sl.TRACE_COUNTS["sa_sweeps"] == base + 1
+    assert prob.evals_done == evals_before
+
+
+def test_repair_jax_clamps_strict_kv():
+    """The masked clamp-and-propagate step removes strict-KV violations on
+    device and returns a design consistent under the backend's matching
+    and tying rules."""
+    import jax.numpy as jnp
+    from repro.core.accel.search_loops import DeviceSA, propagate_jax, \
+        repair_jax
+    from repro.core.optimizers.common import repair
+
+    prob = _problem("tinyllama-1.1b", TRAIN, backend="megatron")
+    sa = DeviceSA(prob)
+    kvl = np.asarray(sa.A.kv_limit)
+    assert (kvl > 0).any(), "arch must have KV-limited nodes"
+    v0 = repair(prob, prob.backend.initial(prob.graph))
+    n = sa.static.n_nodes
+    si = jnp.asarray(np.array(v0.s_in, np.int64)[None, :])
+    kk = jnp.asarray(np.array(v0.kern, np.int64)[None, :])
+    so = jnp.asarray(np.where(kvl > 0, 2 * kvl,
+                              np.array(v0.s_out, np.int64))[None, :])
+    cb = jnp.zeros((1, max(n - 1, 0)), bool)
+    assert bool(((np.asarray(so) > kvl) & (kvl > 0)).any())
+    r_si, r_so, r_kk = repair_jax(sa.static, sa.A, sa.kv_fix, si, so, kk, cb)
+    r_so_np = np.asarray(r_so)
+    assert not ((kvl > 0) & (r_so_np > kvl)).any()
+    # repaired design is a fixed point of propagation (tying consistent)
+    p_si, p_so, p_kk = propagate_jax(sa.static, sa.A, r_si, r_so, r_kk, cb)
+    np.testing.assert_array_equal(np.asarray(p_si), np.asarray(r_si))
+    np.testing.assert_array_equal(np.asarray(p_so), r_so_np)
+    np.testing.assert_array_equal(np.asarray(p_kk), np.asarray(r_kk))
+
+
+# ----------------------------------------------------------------------
 # pallas segmented reduction (interpret mode on CPU)
 # ----------------------------------------------------------------------
 

@@ -1,0 +1,121 @@
+"""Engine-selection matrix for the pipeline entry points.
+
+Every optimiser x engine cell in the ``core/pipeline.py`` docstring table
+must actually be reachable through ``optimise_mapping(engine=...)``, and
+``engine="auto"`` must resolve per jax availability. This module must
+import (and its host-engine cells must pass) WITHOUT jax installed — the
+CI matrix runs it in both environments.
+"""
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.configs.base import ShapeSpec
+from repro.core.accel import (
+    ENGINES,
+    EngineUnavailable,
+    jax_available,
+    resolve_engine,
+)
+from repro.core.platform import Platform
+
+PLAT = Platform(name="t-4x4", mesh_axes=(("data", 4), ("model", 4)))
+SHAPE = ShapeSpec("train_tiny", 256, 16, "train")
+
+OPTIMISERS = ("brute_force", "annealing", "rule_based")
+_KW = {
+    "brute_force": dict(max_points=64, batch_size=32),
+    "annealing": dict(max_iters=24, chains=2, seed=0),
+    "rule_based": {},
+}
+
+
+def _arch():
+    return reduced(get_arch("tinyllama-1.1b"))
+
+
+def test_docstring_documents_every_cell():
+    import repro.core.pipeline as pipeline
+    doc = pipeline.__doc__
+    for eng in ENGINES:
+        assert eng in doc
+    for opt in OPTIMISERS:
+        assert opt in doc
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("optimiser", OPTIMISERS)
+def test_every_optimiser_engine_cell_reachable(optimiser, engine):
+    from repro.core.pipeline import optimise_mapping
+
+    if engine == "jax" and not jax_available():
+        with pytest.raises(EngineUnavailable, match="jax"):
+            optimise_mapping(_arch(), SHAPE, PLAT, optimiser=optimiser,
+                             engine=engine, **_KW[optimiser])
+        return
+    plan = optimise_mapping(_arch(), SHAPE, PLAT, optimiser=optimiser,
+                            engine=engine, **_KW[optimiser])
+    assert plan.partitions
+    assert plan.objective_value == plan.objective_value  # not NaN
+
+
+@pytest.mark.parametrize("optimiser", ("brute_force", "annealing"))
+def test_auto_engine_resolves_per_jax_availability(optimiser, monkeypatch):
+    from repro.core.pipeline import optimise_mapping
+
+    assert resolve_engine("auto") == ("jax" if jax_available() else "numpy")
+    plan = optimise_mapping(_arch(), SHAPE, PLAT, optimiser=optimiser,
+                            engine="auto", **_KW[optimiser])
+    assert plan.partitions
+    # with jax masked out, auto degrades to numpy and still runs
+    import repro.core.accel as accel
+    monkeypatch.setattr(accel, "jax_available", lambda: False)
+    assert accel.resolve_engine("auto") == "numpy"
+    plan = optimise_mapping(_arch(), SHAPE, PLAT, optimiser=optimiser,
+                            engine="auto", **_KW[optimiser])
+    assert plan.partitions
+
+
+def test_portfolio_engine_fallback(monkeypatch):
+    """optimise_portfolio runs on every engine; without jax it degrades to
+    the per-problem host loop with identical API."""
+    from repro.core.pipeline import optimise_portfolio
+
+    archs = [_arch(), reduced(get_arch("llama3.2-1b"))]
+    plans = optimise_portfolio(archs, SHAPE, PLAT, optimiser="brute_force",
+                               engine="numpy", max_points=64, batch_size=32)
+    assert len(plans) == 2 and all(p.partitions for p in plans)
+    import repro.core.accel as accel
+    monkeypatch.setattr(accel, "jax_available", lambda: False)
+    plans = optimise_portfolio(archs, SHAPE, PLAT, optimiser="brute_force",
+                               engine="auto", max_points=64, batch_size=32)
+    assert len(plans) == 2 and all(p.partitions for p in plans)
+    with pytest.raises(EngineUnavailable, match="jax"):
+        optimise_portfolio(archs, SHAPE, PLAT, optimiser="brute_force",
+                           engine="jax", max_points=64)
+
+
+@pytest.mark.skipif(not jax_available(), reason="needs jax")
+def test_portfolio_unsupported_kwargs_route_to_loop():
+    """Optimiser kwargs the fleet doesn't cover (e.g. time_budget_s) fall
+    back to the per-problem loop instead of raising TypeError."""
+    from repro.core.pipeline import optimise_portfolio
+
+    plans = optimise_portfolio([_arch()], SHAPE, PLAT,
+                               optimiser="brute_force", engine="jax",
+                               max_points=64, batch_size=32,
+                               time_budget_s=30.0)
+    assert len(plans) == 1 and plans[0].partitions
+
+
+def test_portfolio_shape_broadcast_and_validation():
+    from repro.core.pipeline import optimise_portfolio
+
+    with pytest.raises(ValueError, match="shapes"):
+        optimise_portfolio([_arch()], [SHAPE, SHAPE], PLAT,
+                           optimiser="brute_force", engine="numpy",
+                           max_points=8)
+    # registry names resolve through get_arch
+    plans = optimise_portfolio(["tinyllama-1.1b"], SHAPE, PLAT,
+                               optimiser="brute_force", engine="numpy",
+                               max_points=8, batch_size=8)
+    assert len(plans) == 1
