@@ -23,7 +23,19 @@ default-engine per-problem loop. Results go to
 ``experiments/benchmarks/fleet_sweep.csv``; a ``fleet`` aggregate row is
 appended to ``experiments/benchmarks/accel_engines.csv``.
 
-``python -m benchmarks.run fleet [--smoke]``
+``--hetero`` runs the heterogeneous-platform variant instead: the network
+portfolio is crossed with several platforms (Table IV spans ZC706- and
+U250-class devices; our analogue ladder mixes mesh and abstract
+platforms) and the whole (model, platform) grid is searched as one fleet.
+Platform scalars and fold tables are device DATA (core/accel/lowering.py),
+so the grid shares executables across platforms — the lane reports the
+executable-count collapse (one traced program for P platforms, where the
+per-platform fleet loop compiles up to P) and aggregate points/s against
+that per-platform loop, after asserting per-problem optima identical to
+the per-problem jax loop. Rows land in
+``experiments/benchmarks/fleet_hetero.csv``.
+
+``python -m benchmarks.run fleet [--smoke] [--hetero]``
 """
 from __future__ import annotations
 
@@ -33,6 +45,7 @@ import time
 
 from repro.core.accel import jax_available
 from repro.core.optimizers import brute_force, simulated_annealing
+from repro.core.platform import Platform
 
 from benchmarks.common import RESULT_DIR, Reporter, make_problem, zoo_arch
 from benchmarks.table4_design_space import _PLATFORM, _device
@@ -43,9 +56,19 @@ BATCH = 16384
 SA_SWEEPS = 600                # device SA sweeps per problem
 SA_CHAINS = 32
 
+#: the platform ladder for --hetero: the Table-IV abstract device plus two
+#: mesh platforms with different fold menus, limits and bandwidth scalars
+#: (the paper's ZC706-vs-U250 analogue)
+HETERO_PLATFORMS = (
+    _PLATFORM,
+    Platform(name="bench-4x4", mesh_axes=(("data", 4), ("model", 4))),
+    Platform(name="bench-2x8", mesh_axes=(("data", 2), ("model", 8)),
+             hbm_bytes=8 * 2**30, hbm_bw=400e9),
+)
 
-def _problems(nets):
-    return [make_problem(zoo_arch(n), backend="spmd", platform=_PLATFORM)
+
+def _problems(nets, platform=_PLATFORM):
+    return [make_problem(zoo_arch(n), backend="spmd", platform=platform)
             for n in nets]
 
 
@@ -73,7 +96,113 @@ def _append_accel_row(default_rate: float, fleet_rate: float, nets) -> None:
         w.writerows(rows)
 
 
-def run(reporter=None, smoke: bool = False) -> Reporter:
+def run_hetero(reporter=None, smoke: bool = False) -> Reporter:
+    """Heterogeneous-platform fleet: one executable for a (model, platform)
+    grid vs the per-platform fleet loop (the PR-3 capability ceiling)."""
+    rep = reporter or Reporter("fleet_hetero")
+    if not jax_available():
+        print("fleet --hetero lane: jax not installed — the fleet engine "
+              "needs the jax extra")
+        return rep
+    from repro.core.accel import search_loops as sl
+    from repro.core.accel.fleet import fleet_annealing, fleet_brute_force
+
+    nets = NETWORKS[:2] if smoke else NETWORKS
+    plats = HETERO_PLATFORMS[:2] if smoke else HETERO_PLATFORMS
+    max_points = 30_000 if smoke else 200_000
+    sweeps = 50 if smoke else SA_SWEEPS
+    chains = 8 if smoke else SA_CHAINS
+    pairs = [(n, p) for p in plats for n in nets]
+
+    def grid():
+        return [make_problem(zoo_arch(n), backend="spmd", platform=p)
+                for n, p in pairs]
+
+    print(f"fleet --hetero device: {_device()}  grid: "
+          f"{len(nets)} networks x {len(plats)} platforms "
+          f"({', '.join(p.name for p in plats)})")
+
+    # ---- brute force --------------------------------------------------
+    bf_kw = dict(include_cuts=False, max_points=max_points,
+                 batch_size=BATCH)
+    loop_jax = [brute_force(pr, engine="jax", **bf_kw) for pr in grid()]
+
+    t0 = time.perf_counter()
+    per_plat, bf_execs_pp = [], 0
+    for p in plats:
+        c0 = sl.TRACE_COUNTS["fleet_bf_chunk"]
+        per_plat += fleet_brute_force(
+            [make_problem(zoo_arch(n), backend="spmd", platform=p)
+             for n in nets], **bf_kw)
+        bf_execs_pp += sl.TRACE_COUNTS["fleet_bf_chunk"] - c0
+    t_pp = time.perf_counter() - t0
+
+    c0 = sl.TRACE_COUNTS["fleet_bf_chunk"]
+    t0 = time.perf_counter()
+    hetero = fleet_brute_force(grid(), **bf_kw)
+    t_het = time.perf_counter() - t0
+    bf_execs_het = sl.TRACE_COUNTS["fleet_bf_chunk"] - c0
+
+    # the portfolio contract, across platforms: identical optima/histories
+    for (n, p), a, b in zip(pairs, loop_jax, hetero):
+        if a.variables != b.variables or a.points != b.points \
+                or a.history != b.history:
+            raise SystemExit(f"fleet --hetero FAILED: {n} on {p.name} "
+                             f"diverges from the per-problem jax loop")
+    pts = sum(r.points for r in hetero)
+    rep.add(mode="brute_force", grid=f"{len(nets)}x{len(plats)}",
+            points=pts, per_platform_executables=bf_execs_pp,
+            hetero_executables=bf_execs_het,
+            per_platform_pts_per_s=f"{pts / t_pp:.0f}",
+            hetero_pts_per_s=f"{pts / t_het:.0f}",
+            speedup=f"{t_pp / max(t_het, 1e-9):.1f}x")
+
+    # ---- SA -----------------------------------------------------------
+    sa_kw = dict(seed=0, max_iters=sweeps * chains, chains=chains)
+    sa_loop = [simulated_annealing(pr, engine="jax", **sa_kw)
+               for pr in grid()]
+    t0 = time.perf_counter()
+    sa_pp, sa_execs_pp = [], 0
+    for p in plats:
+        c0 = sl.TRACE_COUNTS["fleet_sa_sweeps"]
+        sa_pp += fleet_annealing(
+            [make_problem(zoo_arch(n), backend="spmd", platform=p)
+             for n in nets], **sa_kw)
+        sa_execs_pp += sl.TRACE_COUNTS["fleet_sa_sweeps"] - c0
+    t_sa_pp = time.perf_counter() - t0
+
+    c0 = sl.TRACE_COUNTS["fleet_sa_sweeps"]
+    t0 = time.perf_counter()
+    sa_het = fleet_annealing(grid(), **sa_kw)
+    t_sa_het = time.perf_counter() - t0
+    sa_execs_het = sl.TRACE_COUNTS["fleet_sa_sweeps"] - c0
+    for (n, p), a, b in zip(pairs, sa_loop, sa_het):
+        if a.variables != b.variables or a.history != b.history:
+            raise SystemExit(f"fleet --hetero FAILED: {n} on {p.name} SA "
+                             f"diverges from the per-problem device SA")
+    sa_pts = sum(r.points for r in sa_het)
+    rep.add(mode="annealing", grid=f"{len(nets)}x{len(plats)}",
+            points=sa_pts, per_platform_executables=sa_execs_pp,
+            hetero_executables=sa_execs_het,
+            per_platform_pts_per_s=f"{sa_pts / t_sa_pp:.0f}",
+            hetero_pts_per_s=f"{sa_pts / t_sa_het:.0f}",
+            speedup=f"{t_sa_pp / max(t_sa_het, 1e-9):.1f}x")
+
+    rep.print_table("Heterogeneous fleet — (model, platform) grid as one "
+                    "program vs per-platform fleet loop")
+    print(f"hetero identity: {len(pairs)} (model, platform) problems, "
+          f"optima == per-problem jax loop (brute force AND device SA)")
+    print(f"executable collapse: brute force {bf_execs_het} vs "
+          f"{bf_execs_pp} per-platform, SA {sa_execs_het} vs "
+          f"{sa_execs_pp} per-platform ({len(plats)} platforms)")
+    if not smoke:
+        rep.save()
+    return rep
+
+
+def run(reporter=None, smoke: bool = False, hetero: bool = False) -> Reporter:
+    if hetero:
+        return run_hetero(reporter, smoke=smoke)
     rep = reporter or Reporter("fleet_sweep")
     if not jax_available():
         print("fleet lane: jax not installed — the fleet engine needs the "

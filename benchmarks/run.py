@@ -2,12 +2,14 @@
 report, plus a ``tests`` lane running the tier-1 suite with per-test
 timings and engine lanes for the accelerated search.
 
-    python -m benchmarks.run [names...] [--smoke]
+    python -m benchmarks.run [names...] [--smoke] [--hetero]
 
 ``--smoke`` shrinks the smoke-capable lanes (``accel``, ``fleet``) to
 their smallest spaces for CI: the accel smoke lane runs the smallest
 Table-IV space, asserts the jax==numpy optimum agreement, and fails if it
-exceeds 60 s."""
+exceeds 60 s. ``--hetero`` switches the ``fleet`` lane to the
+heterogeneous-platform grid (networks x platforms as ONE fleet program;
+see benchmarks/fleet_sweep.py and docs/benchmarks.md)."""
 from __future__ import annotations
 
 import subprocess
@@ -53,8 +55,11 @@ _SMOKEABLE = ("accel", "fleet")
 def main(argv=None) -> int:
     argv = list(argv if argv is not None else sys.argv[1:])
     smoke = "--smoke" in argv
+    hetero = "--hetero" in argv
     while "--smoke" in argv:
         argv.remove("--smoke")
+    while "--hetero" in argv:
+        argv.remove("--hetero")
     names = argv or [n for n in ALL if n not in _ON_DEMAND]
     for name in names:
         if name not in ALL:
@@ -62,6 +67,8 @@ def main(argv=None) -> int:
             return 1
         t0 = time.time()
         kwargs = {"smoke": True} if smoke and name in _SMOKEABLE else {}
+        if hetero and name == "fleet":
+            kwargs["hetero"] = True
         ret = ALL[name](**kwargs)
         print(f"[{name}] done in {time.time()-t0:.1f}s", flush=True)
         if isinstance(ret, int) and ret != 0:

@@ -10,7 +10,12 @@
 # `-m "not slow"` keeps it under ~2 min; run `python -m pytest` with no
 # filter (or `python -m benchmarks.run tests`) for the full suite,
 # `python -m benchmarks.run accel [--smoke]` for the numpy-vs-jax engine
-# lane, and `python -m benchmarks.run fleet` for the multi-problem sweep.
+# lane, and `python -m benchmarks.run fleet [--hetero]` for the
+# multi-problem / mixed-platform sweeps.
+#
+# The docs lane (tools/check_docs.py) runs first: README/docs code blocks
+# must parse and resolve against the live package and intra-repo links
+# must exist, so the documentation cannot rot silently.
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -25,5 +30,7 @@ if ! python -c "import repro" >/dev/null 2>&1; then
     python -c "import repro" >&2 || true
     exit 2
 fi
+
+python tools/check_docs.py
 
 python -m pytest -x -q --durations=10 -m "not slow" "$@"

@@ -16,7 +16,13 @@ masked form is bitwise identical to the sliced form — and because the mask
 is *data*, the same traced program serves any architecture: the fleet
 engine (``fleet.py``) vmaps this function across a stacked problem axis,
 and padded columns (``DeviceArrays.node_valid``) contribute exactly zero
-to every reduction.
+to every reduction. Platform scalars (resource limits, bandwidths,
+``chips``, the realisability lut sentinel) are likewise read from
+``DeviceArrays`` — scalar operands, so each use broadcasts exactly like
+the host engine's Python floats and the program is bitwise independent of
+*which* platform supplied them: one executable serves any platform, and
+vmapping over stacked per-problem scalar rows serves a heterogeneous
+(model, platform) portfolio.
 
 Entry points are module-level and take ``(static, arrays, ...)`` so the XLA
 executable caches across Problem instances (see lowering.py). Large integer
@@ -125,7 +131,7 @@ def _collective_bytes(static: StaticSpec, A: DeviceArrays,
 
 
 def _realizable(static: StaticSpec, A: DeviceArrays, si, so, kk):
-    cap = static.val_cap                      # sentinel lut slot (-1)
+    cap = A.val_cap                           # sentinel lut slot (-1)
     lut = A.val_lut
     ia = lut[jnp.minimum(si, cap)]
     ib = lut[jnp.minimum(so, cap)]
@@ -161,7 +167,7 @@ def _eval_core(static: StaticSpec, A: DeviceArrays,
     # ---------------- node roofline (perfmodel.node_eval) ----------
     c = sif * sof * kkf
     b_in = jnp.where(A.internal[None, :], jnp.ones((), fdt), sif)
-    compute_s = (A.flops / c) / (static.peak_flops * static.mxu_efficiency)
+    compute_s = (A.flops / c) / (A.peak_flops * static.mxu_efficiency)
 
     w_per_chip = A.weight_bytes / sof
     act_per_chip = A.act_bytes / (b_in * kkf)
@@ -188,10 +194,10 @@ def _eval_core(static: StaticSpec, A: DeviceArrays,
         hbm = hbm + jnp.where(A.weight_stream, w_per_chip,
                               jnp.zeros_like(w_per_chip))
         hbm = hbm + state_per_chip
-    memory_s = hbm / static.hbm_bw
+    memory_s = hbm / A.hbm_bw
 
     coll = _collective_bytes(static, A, si, so, kk, sif, sof, kkf, b_in)
-    collective_s = coll / static.ici_bw * (1.0 - static.overlap_collectives)
+    collective_s = coll / A.ici_bw * (1.0 - static.overlap_collectives)
 
     # ---------------- residency (Eq. 6) ----------------------------
     if static.train:
@@ -240,7 +246,7 @@ def _eval_core(static: StaticSpec, A: DeviceArrays,
             else node_time.sum(axis=1)
         if not static.inter_matching and n > 1:
             t0 = t0 + jnp.where(
-                mism, A.reshard_full[:-1] / static.ici_bw, 0.0).sum(axis=1)
+                mism, A.reshard_full[:-1] / A.ici_bw, 0.0).sum(axis=1)
         t_part = jnp.zeros((N, n), t0.dtype).at[:, 0].set(t0)
         reconf = jnp.zeros((N,), fdt)
         sum_t = t0
@@ -281,14 +287,14 @@ def _eval_core(static: StaticSpec, A: DeviceArrays,
         if not static.inter_matching and n > 1:
             # resharding collectives at intra-partition layout changes
             edge_t = jnp.where(~cb & mism,
-                               A.reshard_full[:-1] / static.ici_bw, 0.0)
+                               A.reshard_full[:-1] / A.ici_bw, 0.0)
             reshard = jnp.einsum("rj,rjp->rp", edge_t, onehot_f[:, :-1, :])
             t_part = t_part + reshard
         t_part = jnp.where(part_valid, t_part, 0.0)
 
         # reconfiguration (Eq. 3): first configuration is pre-loaded
         w_part = seg_sum(w_per_chip)
-        t_conf_part = static.reconf_fixed_s + w_part / static.dma_bw
+        t_conf_part = A.reconf_fixed_s + w_part / A.dma_bw
         later = part_valid & (iota_n[None, :] >= 1)
         reconf = jnp.sum(jnp.where(later, t_conf_part, 0.0), axis=1)
 
@@ -327,9 +333,9 @@ def _eval_core(static: StaticSpec, A: DeviceArrays,
         bad |= differ.any(axis=1)
     # resource (Eq. 6) + streaming chip budget + bandwidth (Eq. 7)
     if single_partition:
-        bad |= resident.sum(axis=1) > static.hbm_bytes
+        bad |= resident.sum(axis=1) > A.hbm_bytes
         if static.exec_model == "streaming":
-            bad |= c_eff.sum(axis=1) > static.chips
+            bad |= c_eff.sum(axis=1) > A.chips
         # single partition: no boundary staging, bandwidth never binds
     else:
         res_part = seg_sum(resident)
@@ -339,14 +345,14 @@ def _eval_core(static: StaticSpec, A: DeviceArrays,
         d_io = seg_sum(A.node_d[None, :]
                        * (start.astype(fdt) + end.astype(fdt)))
         res_tot = res_part + jnp.where(multi[:, None],
-                                       d_io / static.chips, 0.0)
-        bad |= (part_valid & (res_tot > static.hbm_bytes)).any(axis=1)
+                                       d_io / A.chips, 0.0)
+        bad |= (part_valid & (res_tot > A.hbm_bytes)).any(axis=1)
         if static.exec_model == "streaming":
             chips_part = seg_sum(c_eff)
-            bad |= (part_valid & (chips_part > static.chips)).any(axis=1)
+            bad |= (part_valid & (chips_part > A.chips)).any(axis=1)
         # bandwidth uses the pre-resharding partition interval, exactly
         # like constraints.check_bandwidth
-        bw = static.hbm_bw * static.chips
+        bw = A.hbm_bw * A.chips
         bw_bad = multi[:, None] & part_valid & (t_base > 0) \
             & (d_io / jnp.where(t_base > 0, t_base, 1.0) > bw)
         bad |= bw_bad.any(axis=1)
@@ -383,11 +389,13 @@ class JaxEvaluator:
     """
 
     def __init__(self, bev, *, use_pallas: bool = False,
-                 pallas_interpret=None, pad_nodes=None, pad_pairs=None):
+                 pallas_interpret=None, pad_nodes=None, pad_pairs=None,
+                 pad_vals=None, pad_lut=None):
         self.bev = bev
         self.static, self.arrays = lower_program(
             bev, use_pallas=use_pallas, pallas_interpret=pallas_interpret,
-            pad_nodes=pad_nodes, pad_pairs=pad_pairs)
+            pad_nodes=pad_nodes, pad_pairs=pad_pairs,
+            pad_vals=pad_vals, pad_lut=pad_lut)
         self.n_pad = self.static.n_nodes
 
     @classmethod

@@ -6,17 +6,23 @@ dispatches one Problem at a time. This module makes the multi-problem
 sweep itself a device program:
 
   1. **Bucketing** — problems whose trace-shaping configuration matches
-     (mode, backend rules, objective, platform scalars, ModelOptions; see
-     ``StaticSpec``, which since PR 3 carries no per-architecture
-     structure) share a bucket. Within a bucket every per-problem constant
-     is padded to a common shape — node count, decision-slot count, menu
-     radix, scan-pair count — with *neutral* values that provably cannot
-     change any result (lowering.py documents the padding contract; tests
-     assert padded == unpadded bitwise).
+     (mode, backend rules, objective, ModelOptions; see ``StaticSpec``,
+     which since PR 3 carries no per-architecture structure and since
+     PR 4 no platform identity) share a bucket. Platform resource limits,
+     bandwidth scalars and fold-realisability cubes are ``DeviceArrays``
+     data, so a bucket may freely mix target platforms — the paper's
+     "many CNNs onto many devices" sweep is ONE bucket per trace shape,
+     not one per (shape, platform) cell. Within a bucket every
+     per-problem constant is padded to a common shape — node count,
+     decision-slot count, menu radix, scan-pair count, fold-cube size —
+     with *neutral* values that provably cannot change any result
+     (lowering.py documents the padding contract; tests assert padded ==
+     unpadded bitwise).
 
-  2. **Stacking** — the padded ``DeviceArrays`` (and, for SA, the move
-     tables and chain states) are stacked along a new leading problem
-     axis: one device-resident constant set for the whole bucket.
+  2. **Stacking** — the padded ``DeviceArrays`` (platform scalar rows
+     included) and, for SA, the move tables and chain states are stacked
+     along a new leading problem axis: one device-resident constant set
+     for the whole bucket.
 
   3. **vmap** — the *same* traced chunk/sweep bodies the per-problem
      engine jits (``_bf_chunk_core``, ``_sa_scan``) are ``jax.vmap``-ed
@@ -87,17 +93,32 @@ def _node_tier(n: int) -> int:
     return -(-n // NODE_TIER) * NODE_TIER
 
 
+def _platform_pads(problems) -> Tuple[int, int]:
+    """(pad_vals, pad_lut) covering every member platform's fold menu, so
+    a heterogeneous bucket's realisability cubes and value luts stack
+    (lowering.py pads them bit-neutrally: False / -1 fill)."""
+    menus = [p.platform.fold_values() for p in problems]
+    return (max(len(m) for m in menus),
+            max(m[-1] for m in menus) + 2)
+
+
 def _bucket_key(problem, tiered: bool) -> tuple:
     """Problems with equal keys share one StaticSpec (padded node count
     included via the size tier when ``tiered``) and hence one fleet
-    executable."""
+    executable.
+
+    The key holds ONLY trace-shaping structure: mode/objective/exec-model,
+    backend rule flags, ModelOptions, and the node-size tier. Platform
+    identity is deliberately absent — resource limits, bandwidths and the
+    fold cube are ``DeviceArrays`` data, so problems targeting different
+    platforms stack into one bucket (heterogeneous-platform fleets).
+    """
     b = problem.backend
-    p = problem.platform
     return (problem.graph.mode, problem.exec_model, problem.objective,
             problem.batch_amortisation, b.name, b.strict_kv,
             b.intra_matching, b.inter_matching, b.scan_tying,
             tuple(sorted(b.granularity.items())), b.fixed_unity,
-            dataclasses.astuple(problem.opts), p,
+            dataclasses.astuple(problem.opts),
             bool(problem.graph.cut_edges),
             _node_tier(len(problem.graph.nodes)) if tiered else 0)
 
@@ -111,6 +132,32 @@ def bucket_indices(problems, tiered: bool = True) -> List[List[int]]:
     sweep's arrays are chain-sized (tiny); its cost is the op count of the
     scan body, so ONE executable for the whole portfolio beats several
     tier compiles — it buckets untiered.
+
+    Worked example — a Table-IV-style portfolio of six problems::
+
+        idx  graph          nodes  backend   platform       mode
+        0    tinyllama      11     spmd      mesh-4x4       train
+        1    llama3.2       11     spmd      abstract-16    train
+        2    stablelm       12     spmd      mesh-4x4       train
+        3    tinyllama      11     megatron  mesh-4x4       train
+        4    jamba          35     spmd      mesh-4x4       train
+        5    tinyllama      11     spmd      mesh-2x8       decode
+
+    With ``tiered=True`` (brute force, NODE_TIER=4) the buckets are
+    ``[[0, 1, 2], [3], [4], [5]]``:
+
+    * 0, 1 and 2 share backend rules, mode and node tier (11 rounds up
+      to 12) — their three *platforms'* differing limit scalars and fold
+      cubes are stacked data, not separate executables;
+    * 3 splits on backend rule flags (megatron vs spmd shapes the trace:
+      different matching/tying branches);
+    * 4 splits on node tier (36 vs 12 — padding everyone to 35 nodes
+      would tax the whole bucket's chunk throughput);
+    * 5 splits on mode (decode changes the traced row arithmetic).
+
+    With ``tiered=False`` (SA) the node tier is dropped, so 4 joins
+    ``[0, 1, 2, 4]`` — the sweep pads its node axis bit-neutrally and the
+    chain-shaped arrays don't care about graph size.
     """
     byk = {}
     for i, p in enumerate(problems):
@@ -294,8 +341,11 @@ def fleet_brute_force(problems: Sequence, include_cuts: bool = False,
         pairs_pad = max(
             (len(m.problem.batched().scan_pairs) for m in members),
             default=0) or 1
+        vals_pad, lut_pad = _platform_pads(m.problem for m in members)
         jevs = [JaxEvaluator.from_problem(m.problem, pad_nodes=n_pad,
-                                          pad_pairs=pairs_pad)
+                                          pad_pairs=pairs_pad,
+                                          pad_vals=vals_pad,
+                                          pad_lut=lut_pad)
                 for m in members]
         static = jevs[0].static
         assert all(j.static == static for j in jevs), \
@@ -405,15 +455,20 @@ def fleet_annealing(problems: Sequence, seed: int = 0,
         pairs_pad = max(
             (len(p.batched().scan_pairs) for p in members),
             default=0) or 1
-        # build each member's move tables once, then pad the menu axis to
-        # the bucket radix (pad menus hold fold 1; padded entries are
-        # never drawn — menu_sizes is unchanged)
-        tabs = [build_sa_tables(p, pad_nodes=n_pad) for p in members]
+        vals_pad, lut_pad = _platform_pads(members)
+        # build each member's move tables once — the clamp value axis
+        # extends to the bucket's largest platform fold value (exact, see
+        # build_sa_tables) — then pad the menu axis to the bucket radix
+        # (pad menus hold fold 1; padded entries are never drawn —
+        # menu_sizes is unchanged)
+        tabs = [build_sa_tables(p, pad_nodes=n_pad, pad_val=lut_pad - 2)
+                for p in members]
         mm_pad = max(t[0].shape[-1] for t in tabs)
         tabs = [(np.pad(t[0], ((0, 0), (0, 0),
                               (0, mm_pad - t[0].shape[-1])),
                         constant_values=1),) + t[1:] for t in tabs]
         sas = [DeviceSA(p, pad_nodes=n_pad, pad_pairs=pairs_pad,
+                        pad_vals=vals_pad, pad_lut=lut_pad,
                         tables=t) for p, t in zip(members, tabs)]
         static = sas[0].static
         assert all(s.static == static and s.gran == sas[0].gran

@@ -5,18 +5,23 @@ Platform + ModelOptions into per-node numpy arrays; this module converts that
 result into the two halves a jitted program needs:
 
   ``StaticSpec``    an immutable, hashable bundle of everything that shapes
-                    the traced program: mode/backend/objective flags, the
-                    platform scalars, and the (padded) node count. Since
-                    PR 3 the spec carries NO per-architecture structure —
-                    kind columns, scan groups and tying pairs all live in
-                    ``DeviceArrays`` as data — so two different graphs with
-                    the same mode/backend/platform and padded node count
-                    share ONE spec and hence one XLA executable, and the
-                    fleet engine (``fleet.py``) can ``vmap`` the program
-                    across a stacked problem axis.
+                    the traced program: mode/backend/objective flags,
+                    ModelOptions, and the (padded) node count. Since PR 3
+                    the spec carries NO per-architecture structure, and
+                    since PR 4 NO platform identity either — kind columns,
+                    scan groups, tying pairs, resource limits, bandwidth
+                    scalars and the fold-realisability cube all live in
+                    ``DeviceArrays`` as data — so two different graphs on
+                    two different *platforms* with the same mode/backend
+                    flags and padded shapes share ONE spec and hence one
+                    XLA executable, and the fleet engine (``fleet.py``)
+                    can ``vmap`` the program across a stacked
+                    (model, platform) problem axis.
   ``DeviceArrays``  a NamedTuple pytree of ``jnp`` arrays: per-node
                     workload quantities, kind masks, scan-tying pairs,
-                    validity masks and the mesh-realisability lookup table.
+                    validity masks, the per-problem platform scalars
+                    (``peak_flops`` .. ``chips``) and the
+                    mesh-realisability lookup tables.
 
 Padding: ``lower_program(..., pad_nodes=N)`` pads every per-node array to N
 columns with *neutral* nodes (zero work, fold menus pinned to 1, no cuts
@@ -25,7 +30,10 @@ allowed into them) and records the real node count in ``node_valid`` /
 each padded column contributes exactly ``+0.0`` / ``max(..., 0.0)`` /
 ``False`` to every reduction — which is what lets the fleet engine stack
 differently-sized graphs into one program (tests assert the bitwise
-agreement).
+agreement). ``pad_vals`` / ``pad_lut`` pad the realisability cube and the
+value->menu-index lut the same way (unknown values are infeasible either
+way), so problems on platforms with different fold menus can also share
+one executable.
 
 Precision: device arrays are float32/int32 unless jax x64 is enabled
 (``jax.config.update("jax_enable_x64", True)``), in which case the lowering
@@ -51,10 +59,12 @@ MAX_TABLE_VALUES = 64
 class StaticSpec:
     """Hashable trace-shaping configuration for the jitted array program.
 
-    Deliberately architecture-free: everything that differs between two
-    graphs mapped onto the same platform/backend/mode is array *data*
-    (``DeviceArrays``), not trace structure. ``n_nodes`` is the PADDED node
-    count when the lowering was padded.
+    Deliberately architecture-free AND platform-free: everything that
+    differs between two graphs, or between two target platforms, is array
+    *data* (``DeviceArrays``), not trace structure. Only mode/backend
+    rule flags, ModelOptions and the padded node count remain — the things
+    that genuinely change which operations the traced program performs.
+    ``n_nodes`` is the PADDED node count when the lowering was padded.
     """
 
     n_nodes: int
@@ -72,15 +82,6 @@ class StaticSpec:
     grad_compression: float
     mxu_efficiency: float
     overlap_collectives: float
-    # Platform scalars
-    peak_flops: float
-    hbm_bw: float
-    hbm_bytes: float
-    ici_bw: float
-    dma_bw: float
-    reconf_fixed_s: float
-    chips: int
-    val_cap: int                    # realisability lut sentinel slot
     use_pallas: bool = False        # Pallas segmented reduction for T(P_i)
     pallas_interpret: bool = False  # interpret-mode fallback (CPU)
 
@@ -125,6 +126,16 @@ class DeviceArrays(NamedTuple):
     cut_allowed: "jax.Array"
     real_table: "jax.Array"         # [nv, nv, nv] bool over the fold menu
     val_lut: "jax.Array"            # fold value -> menu index (-1 unknown)
+    val_cap: "jax.Array"            # scalar: realisability lut sentinel slot
+    # platform scalars — per-problem DATA, so one executable serves any
+    # platform and the fleet can stack (model, platform) pairs
+    peak_flops: "jax.Array"         # scalar, float
+    hbm_bw: "jax.Array"
+    hbm_bytes: "jax.Array"
+    ici_bw: "jax.Array"
+    dma_bw: "jax.Array"
+    reconf_fixed_s: "jax.Array"
+    chips: "jax.Array"              # scalar, float (exact: chips <= 2**24)
     # kind-specific column masks (see batched_eval._lower's index sets)
     m_attn: "jax.Array"
     m_head: "jax.Array"
@@ -199,7 +210,9 @@ def _mask(index_set, n: int, n_pad: int) -> np.ndarray:
 def lower_program(bev, *, use_pallas: bool = False,
                   pallas_interpret: bool | None = None,
                   pad_nodes: Optional[int] = None,
-                  pad_pairs: Optional[int] = None
+                  pad_pairs: Optional[int] = None,
+                  pad_vals: Optional[int] = None,
+                  pad_lut: Optional[int] = None
                   ) -> Tuple[StaticSpec, DeviceArrays]:
     """Lower a host ``BatchedEvaluator`` onto the default jax device.
 
@@ -209,6 +222,11 @@ def lower_program(bev, *, use_pallas: bool = False,
     ``pad_nodes``/``pad_pairs`` pad the node axis / scan-pair list so
     problems of different sizes can share one StaticSpec (fleet sweeps);
     padded columns are neutral and provably cannot change any result.
+    ``pad_vals``/``pad_lut`` pad the fold-realisability cube and the
+    value->index lut the same way (False / -1 fill: a padded slot is
+    "unknown value" and unknown values were already infeasible), so
+    problems on *different platforms* — whose fold menus differ in size —
+    can also share one StaticSpec and hence one executable.
     """
     jax = require_jax()
     import jax.numpy as jnp
@@ -218,6 +236,18 @@ def lower_program(bev, *, use_pallas: bool = False,
     idt = jnp.int64 if x64 else jnp.int32
 
     table, lut, cap = _realizability_table(bev)
+    nv = table.shape[0]
+    pv = nv if pad_vals is None else int(pad_vals)
+    if pv < nv:
+        raise ValueError(f"pad_vals={pv} < fold menu size {nv}")
+    if pv > nv:
+        t2 = np.zeros((pv, pv, pv), bool)
+        t2[:nv, :nv, :nv] = table
+        table = t2
+    pl = len(lut) if pad_lut is None else int(pad_lut)
+    if pl < len(lut):
+        raise ValueError(f"pad_lut={pl} < lut length {len(lut)}")
+    lut = _pad1(lut, pl, -1)
     if pallas_interpret is None:
         pallas_interpret = jax.default_backend() != "tpu"
 
@@ -226,7 +256,7 @@ def lower_program(bev, *, use_pallas: bool = False,
     if np_ < n:
         raise ValueError(f"pad_nodes={np_} < graph node count {n}")
 
-    plat, opts = bev.platform, bev.opts
+    opts = bev.opts
     static = StaticSpec(
         n_nodes=np_,
         mode=bev.mode,
@@ -242,17 +272,12 @@ def lower_program(bev, *, use_pallas: bool = False,
         grad_compression=opts.grad_compression,
         mxu_efficiency=opts.mxu_efficiency,
         overlap_collectives=opts.overlap_collectives,
-        peak_flops=float(plat.peak_flops),
-        hbm_bw=float(plat.hbm_bw),
-        hbm_bytes=float(plat.hbm_bytes),
-        ici_bw=float(plat.ici_bw),
-        dma_bw=float(plat.dma_bw),
-        reconf_fixed_s=float(plat.reconf_fixed_s),
-        chips=plat.chips,
-        val_cap=cap,
         use_pallas=use_pallas,
         pallas_interpret=pallas_interpret,
     )
+    # the platform scalar vector (batched_eval.PLATFORM_SCALAR_FIELDS
+    # order) becomes per-problem device data — never trace structure
+    pf, hbw, hby, ibw, dbw, rfs, chips = bev.platform_scalars()
 
     # scan-tying pairs padded with (0, 0): a self-pair can never "differ"
     pairs = bev.scan_pairs
@@ -299,6 +324,14 @@ def lower_program(bev, *, use_pallas: bool = False,
                                       max(np_ - 1, 0), False)),
         real_table=jnp.asarray(table),
         val_lut=jnp.asarray(lut, idt),
+        val_cap=jnp.asarray(cap, idt),
+        peak_flops=jnp.asarray(pf, fdt),
+        hbm_bw=jnp.asarray(hbw, fdt),
+        hbm_bytes=jnp.asarray(hby, fdt),
+        ici_bw=jnp.asarray(ibw, fdt),
+        dma_bw=jnp.asarray(dbw, fdt),
+        reconf_fixed_s=jnp.asarray(rfs, fdt),
+        chips=jnp.asarray(chips, fdt),
         m_attn=km(bev.i_attn),
         m_head=km(bev.i_head),
         m_tp=km(bev.i_tp),

@@ -488,7 +488,8 @@ def brute_force_jax(problem, include_cuts: bool, max_cuts: int,
 # ----------------------------------------------------------------------
 
 def build_sa_tables(problem, *, pad_nodes: Optional[int] = None,
-                    pad_menu: Optional[int] = None):
+                    pad_menu: Optional[int] = None,
+                    pad_val: Optional[int] = None):
     """Host-precomputed move tables for the device SA sweep.
 
     Returns numpy arrays (menus [3, n, mm], menu_sizes [3, n], clamp
@@ -496,7 +497,11 @@ def build_sa_tables(problem, *, pad_nodes: Optional[int] = None,
     and cut-edge flag. ``pad_nodes``/``pad_menu`` pad the node / menu axes
     with neutral single-value menus so fleet buckets can stack problems of
     different sizes (padded nodes are never drawn: the sweep bounds its
-    node draw by ``DeviceArrays.n_valid``).
+    node draw by ``DeviceArrays.n_valid``). ``pad_val`` extends the clamp
+    table's value axis to a larger platform's maximum fold value — the
+    divisor walk-down is pure node arithmetic, so the extra entries are
+    exact (and unreachable: this problem's menus never draw them), which
+    lets heterogeneous-platform buckets stack their clamp tables.
     """
     graph, backend, platform = \
         problem.graph, problem.backend, problem.platform
@@ -504,6 +509,10 @@ def build_sa_tables(problem, *, pad_nodes: Optional[int] = None,
     n_pad = n if pad_nodes is None else int(pad_nodes)
 
     max_val = max(platform.fold_values())
+    if pad_val is not None:
+        if pad_val < max_val:
+            raise ValueError(f"pad_val={pad_val} < max fold value {max_val}")
+        max_val = int(pad_val)
     menu_lists = {}
     max_menu = 1
     for vi, var in enumerate(VARS):
@@ -556,10 +565,14 @@ class DeviceSA:
 
     def __init__(self, problem, *, pad_nodes: Optional[int] = None,
                  pad_menu: Optional[int] = None,
-                 pad_pairs: Optional[int] = None, tables=None):
+                 pad_pairs: Optional[int] = None,
+                 pad_vals: Optional[int] = None,
+                 pad_lut: Optional[int] = None, tables=None):
         self.problem = problem
         self.jev = JaxEvaluator.from_problem(problem, pad_nodes=pad_nodes,
-                                             pad_pairs=pad_pairs)
+                                             pad_pairs=pad_pairs,
+                                             pad_vals=pad_vals,
+                                             pad_lut=pad_lut)
         self.static, self.A = self.jev.static, self.jev.arrays
         self.n_real = len(problem.graph.nodes)
         idt = np.int64 if self.A.batch.dtype == jnp.int64 else np.int32
@@ -689,7 +702,7 @@ def _sa_sweep_step(static: StaticSpec, gran: Tuple[str, str, str],
     mi = draws % sizes_i[None, :, :]                 # [8, 3, C]
     vals = menus[jnp.arange(3)[None, :, None],
                  i[None, None, :], mi]               # [8, 3, C]
-    lut, cap = A.val_lut, static.val_cap
+    lut, cap = A.val_lut, A.val_cap
     iv = lut[jnp.minimum(vals, cap)]
     known = (iv >= 0).all(axis=1)
     ok = known & A.real_table[jnp.maximum(iv[:, 0], 0),

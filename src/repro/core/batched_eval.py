@@ -39,6 +39,14 @@ from repro.core.platform import Platform
 
 _ATTN_KINDS = ("attn", "cross_attn", "enc_attn")
 
+#: the platform-derived scalars the accel lowering consumes as per-problem
+#: DEVICE DATA (core/accel/lowering.py), in ``platform_scalars()`` order.
+#: Everything a candidate evaluation needs from the platform beyond the
+#: fold-value menu reduces to this vector plus the realisability cube —
+#: which is what lets one jitted executable serve any platform.
+PLATFORM_SCALAR_FIELDS = ("peak_flops", "hbm_bw", "hbm_bytes", "ici_bw",
+                          "dma_bw", "reconf_fixed_s", "chips")
+
 
 @dataclass
 class BatchResult:
@@ -193,6 +201,18 @@ class BatchedEvaluator:
         for members in by_group.values():
             pairs.extend(zip(members[:-1], members[1:]))
         self.scan_pairs = np.array(pairs, np.int64).reshape(-1, 2)
+
+    # ------------------------------------------------------------------
+    def platform_scalars(self) -> np.ndarray:
+        """The platform scalar vector, ``PLATFORM_SCALAR_FIELDS`` order.
+
+        float64 [7]; ``chips`` is float (exact for any real mesh). The jax
+        lowering turns each entry into a scalar device array so platform
+        identity never enters the traced program.
+        """
+        p = self.platform
+        return np.array([float(getattr(p, f)) for f in
+                         PLATFORM_SCALAR_FIELDS], np.float64)
 
     # ------------------------------------------------------------------
     # packing helpers

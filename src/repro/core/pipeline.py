@@ -6,7 +6,8 @@ This is the public API the launcher and examples call:
                             optimiser="rule_based", objective="throughput")
 
     plans = optimise_portfolio(["tinyllama-1.1b", "llama3.2-1b"], shape,
-                               platform, optimiser="brute_force")
+                               [zc706_like, u250_like],     # per-model
+                               optimiser="brute_force")     # platforms
 
 Engine selection
 ----------------
@@ -15,6 +16,7 @@ Every optimiser evaluates candidate designs through one of three engines
 choice through. ``auto`` resolves to ``jax`` when jax is importable, else
 ``numpy``; requesting ``jax`` explicitly without jax installed raises
 ``core.accel.EngineUnavailable`` naming the missing extra.
+(``docs/architecture.md`` maps the engine layers end to end.)
 
   engine   brute_force                annealing                rule_based
   -------  -------------------------  -----------------------  -----------------
@@ -30,14 +32,19 @@ choice through. ``auto`` resolves to ``jax`` when jax is importable, else
            optimum & history to       per-chain incumbents;    break-even)
            numpy)                     different rng than host)
 
-Platform notes: the jax engine jit-compiles per problem family and runs on
-whatever ``jax.default_backend()`` provides (CPU jit included; TPU/GPU when
-present — the partition-time segmented reduction can route through the
-Pallas kernel in ``core/accel/pallas_segred.py`` on TPU). Device arrays are
-float32 unless ``jax_enable_x64`` is on; the scalar/numpy engines are
-float64 throughout. All engines agree on feasibility and the returned
-design; returned ``Evaluation`` objects are always re-derived through the
-float64 scalar reference.
+Platform notes: the jax engine jit-compiles per trace shape — mode,
+backend rule flags, ModelOptions and padded array shapes — and NOT per
+platform: resource limits, bandwidth/roofline scalars and the
+fold-realisability tables enter the program as device data
+(``core/accel/lowering.py``), so switching platforms, or mixing them in
+one ``optimise_portfolio`` call, reuses the cached XLA executable. It
+runs on whatever ``jax.default_backend()`` provides (CPU jit included;
+TPU/GPU when present — the partition-time segmented reduction can route
+through the Pallas kernel in ``core/accel/pallas_segred.py`` on TPU).
+Device arrays are float32 unless ``jax_enable_x64`` is on; the
+scalar/numpy engines are float64 throughout. All engines agree on
+feasibility and the returned design; returned ``Evaluation`` objects are
+always re-derived through the float64 scalar reference.
 """
 from __future__ import annotations
 
@@ -98,7 +105,7 @@ def optimise_mapping(arch: ArchConfig, shape: ShapeSpec,
 
 
 def optimise_portfolio(archs: Sequence, shapes,
-                       platform: Platform = V5E_POD,
+                       platform=V5E_POD,
                        backend: str = "spmd",
                        optimiser: str = "brute_force",
                        objective: str = "throughput",
@@ -106,18 +113,26 @@ def optimise_portfolio(archs: Sequence, shapes,
                        opts: Optional[ModelOptions] = None,
                        engine: str = "auto",
                        **optimiser_kwargs) -> List[ShardingPlan]:
-    """Optimise a whole portfolio of architectures in one fleet sweep.
+    """Optimise a whole portfolio of (architecture, platform) pairs in one
+    fleet sweep.
 
     ``archs`` is a sequence of ``ArchConfig``s (or registry names);
     ``shapes`` is one ``ShapeSpec`` applied to every arch, or a matching
-    sequence. With the ``jax`` engine (the ``auto`` default when jax is
-    installed) the problems are bucketed by trace signature, padded to a
-    common shape and searched by ONE vmapped XLA executable per bucket
-    (``core/accel/fleet.py``) — per-problem optima, objectives and
-    improvement histories are identical to looping
-    ``optimise_mapping(engine="jax")``, at a multiple of its aggregate
-    points/s (``benchmarks/run.py fleet``). Without jax the portfolio
-    degrades to a per-problem loop on the requested host engine.
+    sequence. ``platform`` is likewise one ``Platform`` for the whole
+    portfolio or a matching sequence of per-problem platforms — platform
+    scalars and fold tables are device *data* (``core/accel/lowering.py``),
+    so a mixed-platform portfolio shares executables exactly like a
+    single-platform one: this is the paper's Table-IV "many networks onto
+    many devices" sweep, and f-CNN^x's pick-the-best-platform-per-model
+    scenario, as one call. With the ``jax`` engine (the ``auto`` default
+    when jax is installed) the problems are bucketed by trace signature —
+    NOT by platform — padded to a common shape and searched by ONE
+    vmapped XLA executable per bucket (``core/accel/fleet.py``); per-
+    problem optima, objectives and improvement histories are identical to
+    looping ``optimise_mapping(engine="jax")``, at a multiple of its
+    aggregate points/s (``benchmarks/run.py fleet [--hetero]``). Without
+    jax the portfolio degrades to a per-problem loop on the requested
+    host engine.
 
     Fleet sweeps cover ``optimiser="brute_force"`` (vmapped chunk decode)
     and ``"annealing"`` (vmapped multi-chain device SA with on-device
@@ -132,9 +147,13 @@ def optimise_portfolio(archs: Sequence, shapes,
         shapes = [shapes] * len(archs)
     if len(shapes) != len(archs):
         raise ValueError(f"got {len(archs)} archs but {len(shapes)} shapes")
-    problems = [make_problem(a, s, platform, backend, objective,
-                             exec_model, opts)
-                for a, s in zip(archs, shapes)]
+    platforms = [platform] * len(archs) if isinstance(platform, Platform) \
+        else list(platform)
+    if len(platforms) != len(archs):
+        raise ValueError(f"got {len(archs)} archs but {len(platforms)} "
+                         f"platforms")
+    problems = [make_problem(a, s, p, backend, objective, exec_model, opts)
+                for a, s, p in zip(archs, shapes, platforms)]
     eng = resolve_engine(engine, allow_fallback=False)
     fleet_kw = {
         "brute_force": {"include_cuts", "max_cuts", "max_points",
@@ -157,7 +176,7 @@ def optimise_portfolio(archs: Sequence, shapes,
     else:
         results = [OPTIMIZERS[optimiser](p, engine=eng, **optimiser_kwargs)
                    for p in problems]
-    return [export_plan(p.graph, r.variables, platform, exec_model,
+    return [export_plan(p.graph, r.variables, p.platform, exec_model,
                         r.evaluation)
             for p, r in zip(problems, results)]
 

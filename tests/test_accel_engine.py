@@ -297,6 +297,140 @@ def test_optimise_portfolio_matches_loop_plans():
 
 
 # ----------------------------------------------------------------------
+# heterogeneous-platform fleets: platform scalars as device data
+# ----------------------------------------------------------------------
+
+from repro.core.platform import AbstractPlatform  # noqa: E402
+
+#: three platforms with different resource limits, bandwidth scalars AND
+#: fold-menu sizes (mesh-4x4: 3 values; mesh-2x8: 4; abstract-16: 16) —
+#: the mixed-fold-cube stacking case
+PLAT_2x8 = Platform(name="t-2x8", mesh_axes=(("data", 2), ("model", 8)),
+                    hbm_bytes=8 * 2**30, hbm_bw=400e9)
+PLAT_ABS = AbstractPlatform(name="t-abs16",
+                            mesh_axes=(("data", 4), ("model", 4)))
+HETERO_PLATS = (PLAT, PLAT_2x8, PLAT_ABS)
+
+
+def _hetero_problems(names, plats, shape=TRAIN, backend="spmd"):
+    probs, pairs = [], []
+    for name, plat in zip(names, plats):
+        arch = reduced(get_arch(name))
+        graph = build_hdgraph(arch, shape)
+        probs.append(Problem(graph=graph, platform=plat,
+                             backend=BACKENDS[backend],
+                             objective="throughput",
+                             exec_model="streaming", opts=ModelOptions()))
+        pairs.append((name, plat.name))
+    return probs, pairs
+
+
+def test_mixed_platforms_bucket_together():
+    """Bucketing keys on trace shape only: one bucket for one graph family
+    across platforms with different scalars and fold-cube sizes."""
+    from repro.core.accel.fleet import bucket_indices
+
+    probs, _ = _hetero_problems(["tinyllama-1.1b"] * 3, HETERO_PLATS)
+    assert bucket_indices(probs) == [[0, 1, 2]]
+    assert bucket_indices(probs, tiered=False) == [[0, 1, 2]]
+    # fold menus really do differ in size — the stacking pads them
+    sizes = {len(p.platform.fold_values()) for p in probs}
+    assert len(sizes) == 3
+
+
+def test_padded_value_tables_bitwise_identical():
+    """pad_vals / pad_lut (the mixed-fold-cube stacking contract) are
+    bitwise neutral, like node padding."""
+    prob = _problem("tinyllama-1.1b", TRAIN)
+    designs = _random_designs(prob, 25, seed=13)
+    bev = prob.batched()
+    packed = bev.pack(designs)
+    nv = len(prob.platform.fold_values())
+    r0 = JaxEvaluator(bev).evaluate_batch(*packed)
+    rp = JaxEvaluator(bev, pad_vals=nv + 13,
+                      pad_lut=max(prob.platform.fold_values()) + 9
+                      ).evaluate_batch(*packed)
+    np.testing.assert_array_equal(r0.objective, rp.objective)
+    np.testing.assert_array_equal(r0.feasible, rp.feasible)
+    np.testing.assert_array_equal(r0.part_times, rp.part_times)
+    np.testing.assert_array_equal(r0.node_resident, rp.node_resident)
+
+
+@pytest.mark.parametrize("optimiser", ["brute_force", "annealing"])
+def test_fleet_hetero_identical_to_loop(optimiser):
+    """Acceptance: a mixed-platform portfolio (different limits, bandwidth
+    scalars and fold-cube sizes) returns per-problem optima, objectives
+    and histories bit-identical to per-problem engine="jax" loops, for
+    both optimisers."""
+    from repro.core.accel.fleet import fleet_annealing, fleet_brute_force
+
+    names = [EXAMPLE_ARCHS[0], EXAMPLE_ARCHS[0], EXAMPLE_ARCHS[1],
+             EXAMPLE_ARCHS[1]]
+    plats = [PLAT, PLAT_ABS, PLAT_2x8, PLAT_ABS]
+    probs, pairs = _hetero_problems(names, plats)
+    if optimiser == "brute_force":
+        kw = dict(include_cuts=True, max_points=2000, batch_size=256)
+        loop = [brute_force(p, engine="jax", **kw)
+                for p in _hetero_problems(names, plats)[0]]
+        fleet = fleet_brute_force(probs, **kw)
+        for pair, a, b in zip(pairs, loop, fleet):
+            assert a.points == b.points, pair
+    else:
+        kw = dict(seed=17, max_iters=120, chains=3)
+        loop = [simulated_annealing(p, engine="jax", **kw)
+                for p in _hetero_problems(names, plats)[0]]
+        fleet = fleet_annealing(probs, **kw)
+    for pair, a, b in zip(pairs, loop, fleet):
+        assert a.variables == b.variables, pair
+        assert a.history == b.history, pair
+        # both re-derive through the float64 scalar reference
+        assert a.evaluation.objective == b.evaluation.objective, pair
+
+
+def test_fleet_hetero_single_executable():
+    """Trace-count acceptance: a portfolio spanning three platforms
+    compiles FEWER executables than platforms — the platform axis is
+    data, so the whole mixed grid is one traced program per bucket."""
+    import jax.numpy as jnp  # noqa: F401
+    from repro.core.accel import search_loops as sl
+    from repro.core.accel.fleet import fleet_annealing, fleet_brute_force
+
+    probs, _ = _hetero_problems(["tinyllama-1.1b"] * 3, HETERO_PLATS)
+    base = sl.TRACE_COUNTS["fleet_bf_chunk"]
+    # chains/sweeps/batch sizes unique in the suite so a previously cached
+    # executable cannot satisfy these calls
+    fleet_brute_force(probs, include_cuts=False, max_points=600,
+                      batch_size=128)
+    bf_traces = sl.TRACE_COUNTS["fleet_bf_chunk"] - base
+    assert bf_traces == 1 < len(HETERO_PLATS)
+
+    probs, _ = _hetero_problems(["tinyllama-1.1b"] * 3, HETERO_PLATS)
+    base = sl.TRACE_COUNTS["fleet_sa_sweeps"]
+    fleet_annealing(probs, seed=3, max_iters=76, chains=2)
+    sa_traces = sl.TRACE_COUNTS["fleet_sa_sweeps"] - base
+    assert sa_traces == 1 < len(HETERO_PLATS)
+
+
+def test_optimise_portfolio_heterogeneous_platforms():
+    """optimise_portfolio accepts per-problem platforms and matches the
+    per-problem optimise_mapping(engine="jax") plans exactly."""
+    from repro.core.pipeline import optimise_mapping, optimise_portfolio
+
+    archs = [reduced(get_arch(n)) for n in EXAMPLE_ARCHS[:3]]
+    plats = [PLAT, PLAT_2x8, PLAT_ABS]
+    kw = dict(optimiser="brute_force", max_points=1000, batch_size=256)
+    plans = optimise_portfolio(archs, TRAIN, plats, **kw)
+    loops = [optimise_mapping(a, TRAIN, p, engine="jax", **kw)
+             for a, p in zip(archs, plats)]
+    for pl, lp in zip(plans, loops):
+        assert pl.objective_value == lp.objective_value
+        assert pl.latency == lp.latency
+        assert pl.throughput == lp.throughput
+        assert [pt.node_indices for pt in pl.partitions] \
+            == [pt.node_indices for pt in lp.partitions]
+
+
+# ----------------------------------------------------------------------
 # on-device SA repair: zero host round-trips mid-sweep
 # ----------------------------------------------------------------------
 

@@ -119,3 +119,23 @@ def test_portfolio_shape_broadcast_and_validation():
                                optimiser="brute_force", engine="numpy",
                                max_points=8, batch_size=8)
     assert len(plans) == 1
+
+
+def test_portfolio_per_problem_platforms_on_host_engines():
+    """A heterogeneous-platform portfolio works on every engine — the
+    numpy per-problem loop included (this cell must pass without jax)."""
+    from repro.core.pipeline import optimise_mapping, optimise_portfolio
+
+    plats = [PLAT, Platform(name="t-2x8",
+                            mesh_axes=(("data", 2), ("model", 8)))]
+    archs = [_arch(), _arch()]
+    kw = dict(optimiser="brute_force", engine="numpy", max_points=64,
+              batch_size=32)
+    plans = optimise_portfolio(archs, SHAPE, plats, **kw)
+    assert len(plans) == 2
+    for plan, plat, arch in zip(plans, plats, archs):
+        loop = optimise_mapping(arch, SHAPE, plat, **kw)
+        assert plan.objective_value == loop.objective_value
+    # platform-count mismatch is a clear error, not a zip truncation
+    with pytest.raises(ValueError, match="platforms"):
+        optimise_portfolio(archs, SHAPE, [PLAT], **kw)

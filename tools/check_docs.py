@@ -1,0 +1,210 @@
+"""Docs lane: keep README/docs from silently rotting.
+
+Two checks over the repo's user-facing markdown (README.md + docs/*.md):
+
+1. **Code blocks** — every fenced ```python block is run through a
+   doctest-style extractor: it must parse, every ``repro.*`` /
+   ``benchmarks.*`` import must resolve against the live package (module
+   AND attribute — a renamed function fails here), and every name a block
+   *uses* must be bound by the block or an earlier block in the same file
+   (blocks form one cumulative session per file, like a doctest).
+   Executing search examples would cost minutes per CI run; resolving
+   their imports and bindings catches the rot that actually happens —
+   renames, moved modules, dropped parameters surfacing as new names.
+
+2. **Intra-repo links** — every relative markdown link target must exist
+   on disk. Links that escape the repo root (GitHub UI paths like the CI
+   badge's ``../../actions/...``) and absolute URLs are skipped.
+
+Run directly (``python tools/check_docs.py``; needs PYTHONPATH=src, like
+the test suite), via ``./ci.sh`` (docs lane) or through
+``tests/test_docs.py``. Exits non-zero listing every failure as
+``file:line: message``.
+"""
+from __future__ import annotations
+
+import ast
+import builtins
+import importlib
+import os
+import re
+import sys
+from typing import Iterator, List, Tuple
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# self-contained: resolve doc imports against this checkout whether or not
+# the caller set PYTHONPATH (repro lives in src/, benchmarks at the root)
+for _p in (os.path.join(REPO_ROOT, "src"), REPO_ROOT):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+#: packages whose doc imports are resolved against the live code; anything
+#: else (stdlib, jax, ...) is assumed installed and left alone
+CHECKED_PACKAGES = ("repro", "benchmarks")
+
+_FENCE = re.compile(r"^```(.*)$")
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def doc_files() -> List[str]:
+    out = [os.path.join(REPO_ROOT, "README.md")]
+    docs = os.path.join(REPO_ROOT, "docs")
+    if os.path.isdir(docs):
+        out += sorted(os.path.join(docs, f) for f in os.listdir(docs)
+                      if f.endswith(".md"))
+    return [f for f in out if os.path.exists(f)]
+
+
+def code_blocks(path: str) -> Iterator[Tuple[int, str, str, bool]]:
+    """(first_line_no, language, source, closed) for each fenced block.
+
+    The language is the first token of the info string, so CommonMark
+    fences like ```python title=x are still checked. A block left open at
+    EOF is yielded with ``closed=False`` so callers can flag it instead
+    of silently dropping it (and everything after it).
+    """
+    lang, buf, start = None, [], 0
+    with open(path, encoding="utf-8") as f:
+        for i, line in enumerate(f, 1):
+            if lang is None:
+                m = _FENCE.match(line.strip())
+                if m:
+                    info = m.group(1).split()
+                    lang, buf, start = (info[0] if info else ""), [], i + 1
+            elif line.strip() == "```":
+                yield start, lang, "".join(buf), True
+                lang = None
+            else:
+                buf.append(line)
+    if lang is not None:
+        yield start, lang, "".join(buf), False
+
+
+def _bound_names(tree: ast.AST) -> set:
+    """Names a block binds at any level (imports, assigns, defs, loops)."""
+    out = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            out.update(a.asname or a.name.split(".")[0] for a in node.names)
+        elif isinstance(node, ast.ImportFrom):
+            out.update(a.asname or a.name for a in node.names)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)):
+            out.add(node.name)
+        elif isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+            out.add(node.id)
+        elif isinstance(node, (ast.arg, ast.alias)):
+            pass
+    return out
+
+
+def _used_names(tree: ast.AST) -> List[Tuple[int, str]]:
+    return [(n.lineno, n.id) for n in ast.walk(tree)
+            if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load)]
+
+
+def _check_import(node, errors, where) -> None:
+    """Resolve repro/benchmarks imports: module must import, from-imported
+    attributes must exist (as attribute or submodule)."""
+    if isinstance(node, ast.Import):
+        mods = [a.name for a in node.names]
+        attrs = []
+    else:                                         # ImportFrom
+        if node.level:                            # relative: not checkable
+            return
+        mods = [node.module or ""]
+        attrs = [a.name for a in node.names]
+    for mod in mods:
+        if mod.split(".")[0] not in CHECKED_PACKAGES:
+            continue
+        try:
+            m = importlib.import_module(mod)
+        except Exception as e:                    # noqa: BLE001
+            errors.append(f"{where}: import {mod!r} failed: {e}")
+            continue
+        for attr in attrs:
+            if hasattr(m, attr):
+                continue
+            sub = f"{mod}.{attr}"
+            try:
+                importlib.import_module(sub)
+            except ModuleNotFoundError as e:
+                if e.name == sub:
+                    errors.append(
+                        f"{where}: {mod!r} has no attribute {attr!r}")
+                else:       # a transitive dependency is missing — say so
+                    errors.append(f"{where}: import {sub!r} failed: {e}")
+            except Exception as e:                # noqa: BLE001
+                errors.append(f"{where}: import {sub!r} failed: {e}")
+
+
+def check_python_blocks(path: str) -> List[str]:
+    errors: List[str] = []
+    rel = os.path.relpath(path, REPO_ROOT)
+    session = set(dir(builtins))                  # cumulative per file
+    for line0, lang, src, closed in code_blocks(path):
+        if not closed:
+            errors.append(f"{rel}:{line0 - 1}: fenced block is never "
+                          f"closed (``` missing)")
+        if lang != "python":
+            continue
+        try:
+            tree = ast.parse(src)
+        except SyntaxError as e:
+            errors.append(f"{rel}:{line0 + (e.lineno or 1) - 1}: "
+                          f"syntax error in python block: {e.msg}")
+            continue
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.Import, ast.ImportFrom)):
+                _check_import(node, errors,
+                              f"{rel}:{line0 + node.lineno - 1}")
+        bound = _bound_names(tree)
+        for lineno, name in _used_names(tree):
+            if name not in session and name not in bound:
+                errors.append(f"{rel}:{line0 + lineno - 1}: name {name!r} "
+                              f"is never bound in this file's blocks")
+        session |= bound
+    return errors
+
+
+def check_links(path: str) -> List[str]:
+    errors: List[str] = []
+    rel = os.path.relpath(path, REPO_ROOT)
+    base = os.path.dirname(path)
+    with open(path, encoding="utf-8") as f:
+        for i, line in enumerate(f, 1):
+            for target in _LINK.findall(line):
+                if target.startswith(("http://", "https://", "mailto:",
+                                      "#")):
+                    continue
+                target = target.split("#")[0]
+                if not target:
+                    continue
+                resolved = os.path.realpath(os.path.join(base, target))
+                if not resolved.startswith(os.path.realpath(REPO_ROOT)):
+                    continue                      # GitHub UI path etc.
+                if not os.path.exists(resolved):
+                    errors.append(f"{rel}:{i}: broken intra-repo link "
+                                  f"{target!r}")
+    return errors
+
+
+def main() -> int:
+    files = doc_files()
+    errors: List[str] = []
+    blocks = 0
+    for path in files:
+        blocks += sum(1 for _, lang, _, _ in code_blocks(path)
+                      if lang == "python")
+        errors += check_python_blocks(path)
+        errors += check_links(path)
+    for e in errors:
+        print(e)
+    print(f"check_docs: {len(files)} files, {blocks} python blocks, "
+          f"{len(errors)} error(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
