@@ -7,11 +7,17 @@ searching one problem at a time:
 
   loop(default)  per-problem ``optimise_mapping`` loop on each optimiser's
                  default engine (brute force: numpy; SA: the host
-                 parallel-tempering engine) — the pre-fleet baseline
+                 parallel-tempering engine; rule based: numpy-batched
+                 probes) — the pre-fleet baseline
   loop(jax)      per-problem jitted engine: compiles per architecture and
-                 dispatches one chunk/sweep stream per problem
+                 dispatches one chunk/sweep/descent stream per problem
   fleet(jax)     one vmapped executable per bucket: one compile and one
                  dispatch stream for the whole portfolio
+
+All THREE optimisers run: brute force (vmapped chunk decode), device SA
+(vmapped sweep loop) and rule based (every problem's Algorithm-2 greedy
+descents advanced in lockstep by one vmapped ``lax.while_loop`` program;
+the lane records its executable count alongside points/s).
 
 Before timing anything the lane asserts the fleet's per-problem optima and
 improvement histories are identical to the per-problem jax loop (the
@@ -276,12 +282,48 @@ def run(reporter=None, smoke: bool = False, hetero: bool = False) -> Reporter:
             speedup_vs_default=f"{sa_fl / max(sa_def, 1e-9):.1f}x",
             speedup_vs_jax=f"{sa_fl / max(sa_jax, 1e-9):.1f}x")
 
+    # ---- rule based: per-problem descents vs one lockstep program -----
+    from repro.core.accel import search_loops as sl
+    from repro.core.accel.fleet import fleet_rule_based
+    from repro.core.optimizers import rule_based
+
+    t0 = time.perf_counter()
+    [rule_based(p, engine="numpy") for p in _problems(nets)]
+    t_rb_def = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    rb_loop = [rule_based(p, engine="jax") for p in _problems(nets)]
+    t_rb_loop = time.perf_counter() - t0
+    c0 = sl.TRACE_COUNTS["fleet_rb_descend"]
+    t0 = time.perf_counter()
+    rb_fleet = fleet_rule_based(_problems(nets))
+    t_rb_fleet = time.perf_counter() - t0
+    rb_execs = sl.TRACE_COUNTS["fleet_rb_descend"] - c0
+    for net, a, b in zip(nets, rb_loop, rb_fleet):
+        if a.variables != b.variables or a.points != b.points \
+                or a.history != b.history:
+            raise SystemExit(f"fleet lane FAILED: {net} fleet rule-based "
+                             f"diverges from the per-problem device "
+                             f"descent")
+    rb_pts = sum(r.points for r in rb_fleet)
+    rb_def = rb_pts / t_rb_def
+    rb_jax = rb_pts / t_rb_loop
+    rb_fl = rb_pts / t_rb_fleet
+    rep.add(mode="rule_based", portfolio="+".join(nets), points=rb_pts,
+            loop_default_pts_per_s=f"{rb_def:.0f}",
+            loop_jax_pts_per_s=f"{rb_jax:.0f}",
+            fleet_pts_per_s=f"{rb_fl:.0f}",
+            speedup_vs_default=f"{rb_fl / max(rb_def, 1e-9):.1f}x",
+            speedup_vs_jax=f"{rb_fl / max(rb_jax, 1e-9):.1f}x")
+    print(f"rule-based executables: fleet {rb_execs} for {len(nets)} "
+          f"problems (one lockstep descent program per bucket)")
+
     rep.print_table("Fleet sweep — per-problem loops vs vmapped "
                     "multi-problem program (aggregate points/s)")
-    agg_def = (pts + sa_pts) / (t_loop_def + t_sa_def)
-    agg_fleet = (pts + sa_pts) / (t_fleet + t_sa_fleet)
+    agg_def = (pts + sa_pts + rb_pts) / (t_loop_def + t_sa_def + t_rb_def)
+    agg_fleet = (pts + sa_pts + rb_pts) / (t_fleet + t_sa_fleet
+                                           + t_rb_fleet)
     print(f"fleet identity: {len(nets)} problems, optima == per-problem "
-          f"jax loop (brute force AND device SA)")
+          f"jax loop (brute force, device SA AND rule based)")
     print(f"aggregate: fleet {agg_fleet:.0f} pts/s vs per-problem "
           f"default-engine loop {agg_def:.0f} pts/s "
           f"({agg_fleet / max(agg_def, 1e-9):.1f}x)")

@@ -27,9 +27,11 @@ from benchmarks import (
 )
 
 def run_tests():
-    """Test lane: the tier-1 suite with the 10 slowest tests reported."""
+    """Test lane: the tier-1 suite with the 25 slowest tests reported
+    (the randomized differential suite's generator budgets are reviewed
+    through this listing — a slow random-graph strategy shows up here)."""
     return subprocess.run(
-        [sys.executable, "-m", "pytest", "-x", "-q", "--durations=10"],
+        [sys.executable, "-m", "pytest", "-x", "-q", "--durations=25"],
         check=False).returncode
 
 

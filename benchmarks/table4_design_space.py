@@ -166,6 +166,27 @@ def run_accel(reporter=None, smoke: bool = False) -> Reporter:
     if not (agree["same_design"] and agree["same_objective"]):
         raise SystemExit("accel lane FAILED: engines disagree on the "
                          "optimum design/objective")
+    # rule-based: the device descent must walk the scalar reference's exact
+    # merge sequence (same probe count, history, design and objective). A
+    # mesh platform keeps the scalar baseline fast enough for the smoke
+    # budget; the randomized suite covers richer menus.
+    from repro.core.optimizers import rule_based
+    from repro.core.platform import Platform
+    rb_plat = Platform(name="accel-4x4",
+                       mesh_axes=(("data", 4), ("model", 4)))
+    rb_net = "3-layer" if smoke else "CNV"
+    rb_make = lambda: make_problem(zoo_arch(rb_net), backend="spmd",
+                                   platform=rb_plat)
+    ra = rule_based(rb_make(), engine="scalar")
+    rb = rule_based(rb_make(), engine="jax")
+    rb_same = (ra.variables == rb.variables and ra.points == rb.points
+               and ra.history == rb.history
+               and ra.evaluation.objective == rb.evaluation.objective)
+    print(f"rule-based agreement on {rb_net} x spmd ({ra.points} probes): "
+          f"jax == scalar merge sequence = {rb_same}")
+    if not rb_same:
+        raise SystemExit("accel lane FAILED: device rule-based diverges "
+                         "from the scalar reference")
     if smoke:
         elapsed = time.perf_counter() - start
         if elapsed > 60:

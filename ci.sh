@@ -33,4 +33,4 @@ fi
 
 python tools/check_docs.py
 
-python -m pytest -x -q --durations=10 -m "not slow" "$@"
+python -m pytest -x -q --durations=25 -m "not slow" "$@"

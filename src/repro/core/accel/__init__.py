@@ -16,16 +16,21 @@ this package is that jit. It holds four layers:
                    optionally a Pallas segmented-reduction kernel with an
                    interpret-mode fallback on CPU).
   search_loops.py  on-device candidate *construction*: mixed-radix digit
-                   decode for brute-force chunks and a ``jax.random``-driven
-                   multi-chain simulated-annealing sweep on ``lax.scan``,
+                   decode for brute-force chunks, a ``jax.random``-driven
+                   multi-chain simulated-annealing sweep on ``lax.scan``
                    with infeasible moves repaired on device (masked
-                   clamp-and-propagate — zero host round-trips mid-sweep).
+                   clamp-and-propagate — zero host round-trips mid-sweep),
+                   and the rule-based optimiser's whole greedy descent as
+                   one ``lax.while_loop`` program (bit-identical move
+                   sequence to the scalar Algorithm 2).
   fleet.py         multi-problem sweeps: bucket problems by trace
                    signature, pad + stack their device constants, and vmap
-                   the brute-force chunks / SA sweeps across the problem
-                   axis — one XLA executable searches the whole portfolio,
-                   with per-problem results bit-identical to the
-                   per-problem loops (``pipeline.optimise_portfolio``).
+                   the brute-force chunks / SA sweeps / rule-based greedy
+                   descents across the problem axis — one XLA executable
+                   searches the whole portfolio (platforms and objectives
+                   are data, so buckets mix both), with per-problem
+                   results bit-identical to the per-problem loops
+                   (``pipeline.optimise_portfolio``).
 
 Engine registry
 ---------------

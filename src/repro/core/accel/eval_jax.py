@@ -60,6 +60,16 @@ from repro.core.perfmodel import (
 )
 
 
+#: incremented inside jitted function bodies — i.e. once per TRACE, not per
+#: call. The no-recompile tests (``assert_max_traces`` in tests/conftest.py)
+#: use this to assert executables are shared across problems, platforms and
+#: objectives. ``search_loops``/``fleet`` re-export and tick the same dict.
+TRACE_COUNTS = {"eval_batch": 0,
+                "sa_sweeps": 0, "bf_chunk": 0, "rb_descend": 0,
+                "fleet_sa_sweeps": 0, "fleet_bf_chunk": 0,
+                "fleet_rb_descend": 0}
+
+
 # ----------------------------------------------------------------------
 # the traced array program
 # ----------------------------------------------------------------------
@@ -300,11 +310,14 @@ def _eval_core(static: StaticSpec, A: DeviceArrays,
 
         sum_t = t_part.sum(axis=1)
     latency = sum_t + reconf
-    Bam = float(static.batch_amortisation)
+    # objective configuration is per-problem DATA (lowering.py): both Eq. 3
+    # and Eq. 4 are computed and a traced where selects — so one executable
+    # serves any (objective, batch_amortisation) mix in a fleet bucket
+    Bam = A.batch_amortisation
     thr_time = Bam * sum_t + reconf
     throughput = jnp.where(thr_time > 0,
                            Bam / jnp.where(thr_time > 0, thr_time, 1.0), 0.0)
-    obj = latency if static.objective == "latency" else -throughput
+    obj = jnp.where(A.obj_latency, latency, -throughput)
 
     # ---------------- constraints ----------------------------------
     bad = jnp.zeros(N, bool)
@@ -369,6 +382,7 @@ def _eval_core(static: StaticSpec, A: DeviceArrays,
 def evaluate_batch_jax(static: StaticSpec, arrays: DeviceArrays,
                        si, so, kk, cb) -> Dict[str, jax.Array]:
     """Jitted standalone evaluate; cached per (StaticSpec, shapes)."""
+    TRACE_COUNTS["eval_batch"] += 1
     return _eval_core(static, arrays, si, so, kk, cb)
 
 

@@ -6,13 +6,15 @@ dispatches one Problem at a time. This module makes the multi-problem
 sweep itself a device program:
 
   1. **Bucketing** — problems whose trace-shaping configuration matches
-     (mode, backend rules, objective, ModelOptions; see ``StaticSpec``,
-     which since PR 3 carries no per-architecture structure and since
-     PR 4 no platform identity) share a bucket. Platform resource limits,
-     bandwidth scalars and fold-realisability cubes are ``DeviceArrays``
-     data, so a bucket may freely mix target platforms — the paper's
-     "many CNNs onto many devices" sweep is ONE bucket per trace shape,
-     not one per (shape, platform) cell. Within a bucket every
+     (mode, backend rules, ModelOptions; see ``StaticSpec``, which since
+     PR 3 carries no per-architecture structure, since PR 4 no platform
+     identity, and since PR 5 no objective configuration) share a bucket.
+     Platform resource limits, bandwidth scalars, fold-realisability
+     cubes, the Eq. 5 objective selector and the Eq. 4 amortisation
+     factor are ``DeviceArrays`` data, so a bucket may freely mix target
+     platforms AND objectives — the paper's "many CNNs onto many
+     devices" sweep is ONE bucket per trace shape, not one per
+     (shape, platform, objective) cell. Within a bucket every
      per-problem constant is padded to a common shape — node count,
      decision-slot count, menu radix, scan-pair count, fold-cube size —
      with *neutral* values that provably cannot change any result
@@ -39,6 +41,7 @@ Entry points mirror the single-problem optimisers and return one
 
     fleet_brute_force(problems, include_cuts=..., batch_size=...)
     fleet_annealing(problems, seed=..., chains=..., max_iters=...)
+    fleet_rule_based(problems, multi_start=...)
 
 ``core.pipeline.optimise_portfolio`` wraps these behind the engine
 registry (falling back to a per-problem host loop when jax is absent).
@@ -60,9 +63,11 @@ from repro.core.accel.eval_jax import JaxEvaluator
 from repro.core.accel.lowering import StaticSpec
 from repro.core.accel.search_loops import (
     TRACE_COUNTS,
+    DeviceRuleBased,
     DeviceSA,
     _construction_tables,
     _pow2ceil,
+    _rb_descend_core,
     _sa_scan,
     absorb_improvements,
     build_sa_tables,
@@ -75,7 +80,8 @@ from repro.core.optimizers.common import (
     repair,
 )
 
-__all__ = ["fleet_brute_force", "fleet_annealing", "bucket_indices"]
+__all__ = ["fleet_brute_force", "fleet_annealing", "fleet_rule_based",
+           "bucket_indices"]
 
 
 def _stack(trees):
@@ -107,15 +113,18 @@ def _bucket_key(problem, tiered: bool) -> tuple:
     included via the size tier when ``tiered``) and hence one fleet
     executable.
 
-    The key holds ONLY trace-shaping structure: mode/objective/exec-model,
-    backend rule flags, ModelOptions, and the node-size tier. Platform
-    identity is deliberately absent — resource limits, bandwidths and the
-    fold cube are ``DeviceArrays`` data, so problems targeting different
-    platforms stack into one bucket (heterogeneous-platform fleets).
+    The key holds ONLY trace-shaping structure: mode/exec-model, backend
+    rule flags, ModelOptions, and the node-size tier. Platform identity is
+    deliberately absent — resource limits, bandwidths and the fold cube
+    are ``DeviceArrays`` data, so problems targeting different platforms
+    stack into one bucket (heterogeneous-platform fleets). The objective
+    and ``batch_amortisation`` are likewise absent since PR 5 (they are
+    ``DeviceArrays.obj_latency`` / ``.batch_amortisation``): a bucket may
+    mix latency- and throughput-objective problems and still share one
+    executable.
     """
     b = problem.backend
-    return (problem.graph.mode, problem.exec_model, problem.objective,
-            problem.batch_amortisation, b.name, b.strict_kv,
+    return (problem.graph.mode, problem.exec_model, b.name, b.strict_kv,
             b.intra_matching, b.inter_matching, b.scan_tying,
             tuple(sorted(b.granularity.items())), b.fixed_unity,
             dataclasses.astuple(problem.opts),
@@ -426,6 +435,29 @@ def fleet_brute_force(problems: Sequence, include_cuts: bool = False,
 # simulated annealing
 # ----------------------------------------------------------------------
 
+def _bucket_tables(members: Sequence):
+    """Shared bucket stacking prep for the SA and rule-based fleets:
+    common pad sizes plus each member's move tables, built once with the
+    clamp value axis extended to the bucket's largest platform fold value
+    (``pad_val = lut_pad - 2``, exact — see ``build_sa_tables``) and the
+    menu axis padded to the bucket radix with fold 1 (padded entries are
+    never drawn/probed: ``menu_sizes`` is unchanged and the rule-based
+    in-menu test excludes them). Returns
+    ``(n_pad, pairs_pad, vals_pad, lut_pad, tabs)``."""
+    n_pad = max(len(p.graph.nodes) for p in members)
+    pairs_pad = max(
+        (len(p.batched().scan_pairs) for p in members),
+        default=0) or 1
+    vals_pad, lut_pad = _platform_pads(members)
+    tabs = [build_sa_tables(p, pad_nodes=n_pad, pad_val=lut_pad - 2)
+            for p in members]
+    mm_pad = max(t[0].shape[-1] for t in tabs)
+    tabs = [(np.pad(t[0], ((0, 0), (0, 0),
+                          (0, mm_pad - t[0].shape[-1])),
+                    constant_values=1),) + t[1:] for t in tabs]
+    return n_pad, pairs_pad, vals_pad, lut_pad, tabs
+
+
 def fleet_annealing(problems: Sequence, seed: int = 0,
                     k_start: float = 1000.0, k_min: float = 1.0,
                     cooling: float = 0.98,
@@ -451,22 +483,7 @@ def fleet_annealing(problems: Sequence, seed: int = 0,
     for idxs in bucket_indices(problems, tiered=False):
         start = time.perf_counter()
         members = [problems[i] for i in idxs]
-        n_pad = max(len(p.graph.nodes) for p in members)
-        pairs_pad = max(
-            (len(p.batched().scan_pairs) for p in members),
-            default=0) or 1
-        vals_pad, lut_pad = _platform_pads(members)
-        # build each member's move tables once — the clamp value axis
-        # extends to the bucket's largest platform fold value (exact, see
-        # build_sa_tables) — then pad the menu axis to the bucket radix
-        # (pad menus hold fold 1; padded entries are never drawn —
-        # menu_sizes is unchanged)
-        tabs = [build_sa_tables(p, pad_nodes=n_pad, pad_val=lut_pad - 2)
-                for p in members]
-        mm_pad = max(t[0].shape[-1] for t in tabs)
-        tabs = [(np.pad(t[0], ((0, 0), (0, 0),
-                              (0, mm_pad - t[0].shape[-1])),
-                        constant_values=1),) + t[1:] for t in tabs]
+        n_pad, pairs_pad, vals_pad, lut_pad, tabs = _bucket_tables(members)
         sas = [DeviceSA(p, pad_nodes=n_pad, pad_pairs=pairs_pad,
                         pad_vals=vals_pad, pad_lut=lut_pad,
                         tables=t) for p, t in zip(members, tabs)]
@@ -532,4 +549,118 @@ def fleet_annealing(problems: Sequence, seed: int = 0,
             results[idxs[mi]] = OptimResult(
                 best_v, best_eval, total_sweeps * chains, elapsed, history,
                 name=f"annealing-jax{chains}")
+    return results
+
+
+# ----------------------------------------------------------------------
+# rule based (Algorithm 2)
+# ----------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def _fleet_rb_descend(static: StaticSpec, gran, A, menus, menu_sizes,
+                      clamp, si, so, kk, cb_row, part_mask, pidx, amort,
+                      cap):
+    """One greedy descent for EVERY problem in a bucket: the verbatim
+    per-problem descent body (``_rb_descend_core``) under ``jax.vmap``.
+    The vmapped ``lax.while_loop`` steps while ANY lane still has
+    unblocked partition nodes; lanes whose descent converged early (and
+    lanes masked out with ``cap == 0`` because their problem has no
+    pending request this round) are carried through unchanged — no-ops in
+    lockstep with the rest of the bucket."""
+    TRACE_COUNTS["fleet_rb_descend"] += 1
+    fn = functools.partial(_rb_descend_core, static, gran)
+    return jax.vmap(fn)(A, menus, menu_sizes, clamp, si, so, kk, cb_row,
+                        part_mask, pidx, amort, cap)
+
+
+def fleet_rule_based(problems: Sequence,
+                     time_budget_s: Optional[float] = None,
+                     multi_start: bool = True) -> List[OptimResult]:
+    """Vmapped multi-problem rule-based optimisation (Algorithm 2).
+
+    Every problem runs the SAME host control flow as the per-problem
+    engine — ``rule_based._algorithm2`` is instantiated once per problem
+    as a generator — but the greedy descents the generators request are
+    answered in lockstep: one vmapped ``_rb_descend`` call per round
+    advances every pending problem's descent to convergence, problems
+    with no pending request ride along as ``cap == 0`` no-op lanes, and
+    the round loop continues until every generator has returned. Because
+    the merge bookkeeping is the shared host code and the descent body is
+    the verbatim per-problem program, per-problem merge sequences, final
+    designs, objectives, point counts and histories are identical to
+    ``rule_based(problem, engine="jax")`` loops (tests assert bitwise).
+    As with the other fleets, each result's ``seconds`` is its bucket's
+    wall time (members descend simultaneously), and a bucket may mix
+    platforms AND objectives — both are device data.
+
+    ``time_budget_s`` is a BUCKET-level budget: every member's clock
+    measures the shared lockstep wall time, so a budgeted fleet truncates
+    each problem's multi-start/merge work differently than its own
+    per-problem loop would — per-problem bit-identity holds only for
+    ``time_budget_s=None``. ``optimise_portfolio`` therefore routes
+    budgeted rule-based portfolios through the per-problem loop.
+    """
+    from repro.core.optimizers.rule_based import _algorithm2
+
+    results: List[Optional[OptimResult]] = [None] * len(problems)
+    for idxs in bucket_indices(problems, tiered=False):
+        members = [problems[i] for i in idxs]
+        P = len(members)
+        n_pad, pairs_pad, vals_pad, lut_pad, tabs = _bucket_tables(members)
+        rbs = [DeviceRuleBased(p, pad_nodes=n_pad, pad_pairs=pairs_pad,
+                               pad_vals=vals_pad, pad_lut=lut_pad,
+                               tables=t) for p, t in zip(members, tabs)]
+        static = rbs[0].static
+        assert all(r.static == static and r.gran == rbs[0].gran
+                   for r in rbs), \
+            "bucketed problems must share a StaticSpec"
+        A_st = _stack([r.A for r in rbs])
+        menus_st = jnp.stack([r.menus for r in rbs])
+        sizes_st = jnp.stack([r.menu_sizes for r in rbs])
+        clamp_st = jnp.stack([r.clamp for r in rbs])
+        amort = jnp.asarray(np.asarray([r.amort for r in rbs]),
+                            rbs[0].A.flops.dtype)
+        idt_np = np.int64 if rbs[0].A.batch.dtype == jnp.int64 else np.int32
+
+        gens = [_algorithm2(p, time_budget_s, multi_start) for p in members]
+        pending: List[Optional[tuple]] = []
+        for li, g in enumerate(gens):
+            try:
+                pending.append(next(g))
+            except StopIteration as stop:    # pragma: no cover (>= 1 part)
+                results[idxs[li]] = stop.value
+                pending.append(None)
+
+        E = max(n_pad - 1, 0)
+        while any(req is not None for req in pending):
+            si = np.ones((P, n_pad), idt_np)
+            so = np.ones((P, n_pad), idt_np)
+            kk = np.ones((P, n_pad), idt_np)
+            cb = np.zeros((P, E), bool)
+            pm = np.zeros((P, n_pad), bool)
+            pidx = np.zeros(P, idt_np)
+            cap = np.zeros(P, idt_np)        # 0 => masked no-op lane
+            for li, req in enumerate(pending):
+                if req is None:
+                    continue
+                v, part = req
+                (si[li], so[li], kk[li], cb[li], pm[li], pidx[li],
+                 cap[li]) = rbs[li].pack_request(v, part)
+            o_si, o_so, o_kk, pts = (np.asarray(x) for x in
+                                     _fleet_rb_descend(
+                static, rbs[0].gran, A_st, menus_st, sizes_st, clamp_st,
+                jnp.asarray(si), jnp.asarray(so), jnp.asarray(kk),
+                jnp.asarray(cb), jnp.asarray(pm), jnp.asarray(pidx),
+                amort, jnp.asarray(cap)))
+            for li, req in enumerate(pending):
+                if req is None:
+                    continue
+                v, part = req
+                resp = rbs[li].unpack(v, o_si[li], o_so[li], o_kk[li],
+                                      pts[li])
+                try:
+                    pending[li] = gens[li].send(resp)
+                except StopIteration as stop:
+                    results[idxs[li]] = stop.value
+                    pending[li] = None
     return results

@@ -5,18 +5,21 @@ Platform + ModelOptions into per-node numpy arrays; this module converts that
 result into the two halves a jitted program needs:
 
   ``StaticSpec``    an immutable, hashable bundle of everything that shapes
-                    the traced program: mode/backend/objective flags,
-                    ModelOptions, and the (padded) node count. Since PR 3
-                    the spec carries NO per-architecture structure, and
-                    since PR 4 NO platform identity either — kind columns,
-                    scan groups, tying pairs, resource limits, bandwidth
-                    scalars and the fold-realisability cube all live in
+                    the traced program: mode/backend flags, ModelOptions,
+                    and the (padded) node count. Since PR 3 the spec
+                    carries NO per-architecture structure, since PR 4 NO
+                    platform identity, and since PR 5 NO objective
+                    configuration either — kind columns, scan groups,
+                    tying pairs, resource limits, bandwidth scalars, the
+                    fold-realisability cube, the Eq. 5 objective selector
+                    and the Eq. 4 batch-amortisation factor all live in
                     ``DeviceArrays`` as data — so two different graphs on
-                    two different *platforms* with the same mode/backend
-                    flags and padded shapes share ONE spec and hence one
-                    XLA executable, and the fleet engine (``fleet.py``)
-                    can ``vmap`` the program across a stacked
-                    (model, platform) problem axis.
+                    two different *platforms* optimising two different
+                    *objectives* with the same mode/backend flags and
+                    padded shapes share ONE spec and hence one XLA
+                    executable, and the fleet engine (``fleet.py``) can
+                    ``vmap`` the program across a stacked
+                    (model, platform, objective) problem axis.
   ``DeviceArrays``  a NamedTuple pytree of ``jnp`` arrays: per-node
                     workload quantities, kind masks, scan-tying pairs,
                     validity masks, the per-problem platform scalars
@@ -64,18 +67,21 @@ class StaticSpec:
     *data* (``DeviceArrays``), not trace structure. Only mode/backend
     rule flags, ModelOptions and the padded node count remain — the things
     that genuinely change which operations the traced program performs.
-    ``n_nodes`` is the PADDED node count when the lowering was padded.
+    Since PR 5 the per-problem objective (``latency`` vs ``throughput``)
+    and ``batch_amortisation`` are data too (``DeviceArrays.obj_latency``
+    / ``.batch_amortisation``): Eq. 5 selects the objective with a traced
+    ``where`` over both computed branches, so a mixed-objective fleet
+    bucket shares one executable. ``n_nodes`` is the PADDED node count
+    when the lowering was padded.
     """
 
     n_nodes: int
     mode: str                       # train | prefill | decode
     exec_model: str                 # streaming | spmd
-    objective: str                  # latency | throughput
     strict_kv: bool
     intra_matching: bool
     inter_matching: bool
     scan_tying: bool
-    batch_amortisation: int
     # ModelOptions
     zero1: bool
     seq_parallel_stash: bool
@@ -136,6 +142,12 @@ class DeviceArrays(NamedTuple):
     dma_bw: "jax.Array"
     reconf_fixed_s: "jax.Array"
     chips: "jax.Array"              # scalar, float (exact: chips <= 2**24)
+    # per-problem objective configuration — DATA since PR 5, so a fleet
+    # bucket may mix objectives and amortisation factors without splitting
+    # the cached executable (Eq. 5 selects via a traced where, Eq. 4's B
+    # is a runtime scalar)
+    obj_latency: "jax.Array"        # scalar bool: True => Eq. 3 latency
+    batch_amortisation: "jax.Array"  # scalar, float (B in Eq. 4; exact)
     # kind-specific column masks (see batched_eval._lower's index sets)
     m_attn: "jax.Array"
     m_head: "jax.Array"
@@ -261,12 +273,10 @@ def lower_program(bev, *, use_pallas: bool = False,
         n_nodes=np_,
         mode=bev.mode,
         exec_model=bev.exec_model,
-        objective=bev.objective,
         strict_kv=bev.strict_kv,
         intra_matching=bev.intra_matching,
         inter_matching=bev.inter_matching,
         scan_tying=bev.scan_tying,
-        batch_amortisation=bev.batch_amortisation,
         zero1=opts.zero1,
         seq_parallel_stash=opts.seq_parallel_stash,
         grad_compression=opts.grad_compression,
@@ -332,6 +342,8 @@ def lower_program(bev, *, use_pallas: bool = False,
         dma_bw=jnp.asarray(dbw, fdt),
         reconf_fixed_s=jnp.asarray(rfs, fdt),
         chips=jnp.asarray(chips, fdt),
+        obj_latency=jnp.asarray(bev.objective == "latency"),
+        batch_amortisation=jnp.asarray(float(bev.batch_amortisation), fdt),
         m_attn=km(bev.i_attn),
         m_head=km(bev.i_head),
         m_tp=km(bev.i_tp),

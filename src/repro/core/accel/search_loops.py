@@ -1,7 +1,8 @@
-"""On-device candidate construction: brute-force chunks + multi-chain SA.
+"""On-device candidate construction: brute-force chunks, multi-chain SA,
+and the rule-based greedy descent.
 
 Enumeration throughput dies the moment candidate *construction* round-trips
-to Python, so both search loops build their candidates on device:
+to Python, so all three search loops build their candidates on device:
 
   brute force   a mixed-radix digit decode. The host reduces the (possibly
                 > 2^63-point) global enumeration index to one small int32
@@ -26,6 +27,20 @@ to Python, so both search loops build their candidates on device:
                 and fold moves always redraw the whole triple — this is a
                 different (device-shaped) explorer, not a bit-identical
                 port.
+
+  rule based    Algorithm 2's greedy descent as ONE ``lax.while_loop``
+                program per partition (``DeviceRuleBased`` /
+                ``_rb_descend``): each step evaluates the incumbent, picks
+                the slowest unblocked partition node, expands its joint
+                fold menu (s_in-major — the scalar probe order) through
+                the scoped scatter + single propagate pass, evaluates all
+                probes WITH the incumbent in the same batch, and applies
+                the feasible strictly-improving probe with the smallest
+                lexicographic (collective, residency) resource delta. The
+                chosen move sequence is IDENTICAL to the scalar
+                reference's; Algorithm 2's outer merge loop stays on the
+                host (``optimizers/rule_based._algorithm2``), shared
+                verbatim by every engine.
 
 Every random draw in the SA sweep has a shape that depends only on the
 chain count — never on the (possibly padded) node or edge axis — so the
@@ -54,7 +69,11 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.accel.eval_jax import JaxEvaluator, _eval_core
+from repro.core.accel.eval_jax import (
+    TRACE_COUNTS,
+    JaxEvaluator,
+    _eval_core,
+)
 from repro.core.accel.lowering import DeviceArrays, StaticSpec
 from repro.core.hdgraph import Variables
 from repro.core.optimizers.common import OptimResult
@@ -62,12 +81,11 @@ from repro.core.optimizers.common import OptimResult
 VARS = ("s_in", "s_out", "kern")
 _DIMS = {"s_in": "rows", "s_out": "col_div", "kern": "batch"}
 
-#: incremented inside jitted function bodies — i.e. once per TRACE, not per
-#: call. tests/test_accel_engine.py uses this to assert the device SA sweep
-#: (including its repair path) runs as one jitted program with zero host
-#: round-trips.
-TRACE_COUNTS = {"sa_sweeps": 0, "bf_chunk": 0,
-                "fleet_sa_sweeps": 0, "fleet_bf_chunk": 0}
+# TRACE_COUNTS (re-exported from eval_jax so existing callers keep working)
+# is incremented inside jitted function bodies — i.e. once per TRACE, not
+# per call. tests use it (via the ``assert_max_traces`` fixture) to assert
+# the device loops run as single jitted programs with zero host round-trips
+# and that executables are shared across problems/platforms/objectives.
 
 
 def _pow2ceil(x: int) -> int:
@@ -154,6 +172,62 @@ def propagate_jax(static: StaticSpec, A: DeviceArrays, si, so, kk, cb,
         if static.intra_matching:
             so = jnp.where(A.elementwise[None, :], si, so)
     return si, so, kk
+
+
+def _scope_mask(g: str, same_part, scan_groups, sg_i, oh_i):
+    """``Backend.scope`` as a node mask for one granularity: which nodes
+    share a variable with the chosen node — the whole partition
+    (``global``), the node's scan group within the partition (``group``,
+    falling back to the node itself when it has no group), or the node
+    alone. Shape-generic (operands [n] or broadcast [C, n]); shared by
+    the scatter (``_scatter_triple``) and the rule-based unblock step so
+    the two can never drift apart."""
+    if g == "global":
+        return same_part
+    if g == "group":
+        return jnp.where(sg_i >= 0, same_part & (scan_groups == sg_i),
+                         oh_i)
+    return oh_i
+
+
+def _scatter_triple(static: StaticSpec, gran: Tuple[str, str, str],
+                    A: DeviceArrays, clamp, si, so, kk, cb, i, v3):
+    """``Backend.set_fold`` of a joint fold triple, batched on device.
+
+    Scatters the (per-node clamped) values of ``v3`` [3, C] over node
+    ``i``'s tying scope in each of the C rows — global granularity writes
+    the whole partition, group granularity the node's scan group within
+    the partition, node granularity the node itself; globally-tied s_in
+    skips decode split-KV (internal-rows) nodes exactly like the host —
+    then ONE ``propagate_jax`` pass restores the backend's matching and
+    tying invariants. Shared by the SA proposal and the rule-based probe
+    construction, whose scalar references both build candidates through
+    sequential ``set_fold`` calls: for the real backends the composition
+    scatter-all-then-propagate-once is equivalent (the cross-engine parity
+    tests assert it across every example arch and the randomized graphs).
+    """
+    n = static.n_nodes
+    idt = A.batch.dtype
+    iota_n = jnp.arange(n, dtype=idt)
+    C = si.shape[0]
+    pid = jnp.concatenate(
+        [jnp.zeros((C, 1), idt), jnp.cumsum(cb.astype(idt), axis=1)],
+        axis=1)
+    pid_i = jnp.take_along_axis(pid, i[:, None], 1)
+    same_part = pid == pid_i
+    sg_i = A.scan_group[i]
+    oh_i = iota_n[None, :] == i[:, None]
+    fold = {"s_in": si, "s_out": so, "kern": kk}
+    for vi, var in enumerate(VARS):
+        g = gran[vi]
+        m = _scope_mask(g, same_part, A.scan_group[None, :],
+                        sg_i[:, None], oh_i)
+        if var == "s_in" and g == "global":
+            m = m & ~A.internal[None, :]     # decode split-KV keeps s_I
+        clamped = clamp[vi][iota_n[None, :], v3[vi][:, None]]
+        fold[var] = jnp.where(m, clamped, fold[var])
+    return propagate_jax(static, A, fold["s_in"], fold["s_out"],
+                         fold["kern"], cb)
 
 
 def repair_jax(static: StaticSpec, A: DeviceArrays, kv_fix, si, so, kk, cb):
@@ -666,9 +740,6 @@ def _sa_sweep_step(static: StaticSpec, gran: Tuple[str, str, str],
                    has_cut_edges: bool, A: DeviceArrays, menus, menu_sizes,
                    clamp, kv_fix, scale, cooling, k_min, carry, _):
     """One SA sweep for all chains: propose, repair, evaluate, accept."""
-    n = static.n_nodes
-    idt = A.batch.dtype
-    iota_n = jnp.arange(n, dtype=idt)
     st, temps = carry
     key, kt, kc1, kc2, kc3, kn, km, kacc = \
         jax.random.split(st["key"], 8)
@@ -711,31 +782,8 @@ def _sa_sweep_step(static: StaticSpec, gran: Tuple[str, str, str],
     sel = jnp.where(ok.any(axis=0), jnp.argmax(ok, axis=0), 7)
     v3 = jnp.take_along_axis(vals, sel[None, None, :], 0)[0]   # [3, C]
 
-    pid = jnp.concatenate(
-        [jnp.zeros((C, 1), idt), jnp.cumsum(cb.astype(idt), axis=1)],
-        axis=1)
-    pid_i = jnp.take_along_axis(pid, i[:, None], 1)
-    same_part = pid == pid_i
-    sg_i = A.scan_group[i]
-    oh_i = iota_n[None, :] == i[:, None]
-    fold = {"s_in": si, "s_out": so, "kern": kk}
-    for vi, var in enumerate(VARS):
-        g = gran[vi]
-        if g == "global":
-            m = same_part
-        elif g == "group":
-            m = jnp.where(sg_i[:, None] >= 0,
-                          same_part
-                          & (A.scan_group[None, :] == sg_i[:, None]),
-                          oh_i)
-        else:
-            m = oh_i
-        if var == "s_in" and g == "global":
-            m = m & ~A.internal[None, :]     # decode split-KV keeps s_I
-        clamped = clamp[vi][iota_n[None, :], v3[vi][:, None]]
-        fold[var] = jnp.where(m, clamped, fold[var])
-    p_si, p_so, p_kk = propagate_jax(static, A, fold["s_in"],
-                                     fold["s_out"], fold["kern"], cb)
+    p_si, p_so, p_kk = _scatter_triple(static, gran, A, clamp,
+                                       si, so, kk, cb, i, v3)
     # on-device repair: masked clamp-and-propagate (no host round-trip)
     p_si, p_so, p_kk = repair_jax(static, A, kv_fix, p_si, p_so, p_kk, cb)
 
@@ -804,3 +852,236 @@ def _sa_sweeps(static: StaticSpec, gran: Tuple[str, str, str],
     return _sa_scan(static, gran, has_cut_edges, n_sweeps, A, menus,
                     menu_sizes, clamp, kv_fix, state, temps, scale,
                     cooling, k_min)
+
+
+# ----------------------------------------------------------------------
+# rule-based (Algorithm 2): the whole greedy descent as one device loop
+# ----------------------------------------------------------------------
+
+def _rb_step(static: StaticSpec, gran: Tuple[str, str, str],
+             A: DeviceArrays, menus, menu_sizes, clamp, cb_row, part_mask,
+             pidx, amort, si, so, kk, blocked, points):
+    """One Algorithm-2 greedy step, entirely on device.
+
+    Mirrors the scalar ``optimise_partition`` step exactly: pick the
+    slowest unblocked node of the partition, enumerate its joint fold menu
+    (s_in-major, the scalar probe order), construct every probe through
+    the scoped scatter + propagate, evaluate probes WITH the incumbent as
+    row 0 (both sides of every comparison carry the same rounding), and
+    select the feasible, strictly-improving probe with the
+    lexicographically smallest (collective-bytes, residency) resource
+    delta — earliest probe wins ties, as in the scalar loop. A step with
+    no winning probe blocks the node; a winning move unblocks the node's
+    tying scopes.
+    """
+    n = static.n_nodes
+    idt = A.batch.dtype
+    fdt = A.flops.dtype
+    iota_n = jnp.arange(n, dtype=idt)
+    mm = menus.shape[-1]
+    B = mm * mm * mm
+
+    # ---- slowest unblocked node of the partition ---------------------
+    ev0 = _eval_core(static, A, si[None, :], so[None, :], kk[None, :],
+                     cb_row[None, :])
+    cand = part_mask & ~blocked
+    nt = jnp.where(cand, ev0["node_times"][0], -jnp.inf)
+    j = jnp.argmax(nt).astype(idt)
+
+    # ---- the node's joint fold menu, in scalar probe order -----------
+    p = jnp.arange(B, dtype=idt)
+    a, b, c = p // (mm * mm), (p // mm) % mm, p % mm
+    v3 = jnp.stack([menus[0, j, a], menus[1, j, b], menus[2, j, c]])
+    in_menu = (a < menu_sizes[0, j]) & (b < menu_sizes[1, j]) \
+        & (c < menu_sizes[2, j])
+    cur = jnp.stack([si[j], so[j], kk[j]])
+    not_cur = (v3 != cur[:, None]).any(axis=0)
+    lut, cap = A.val_lut, A.val_cap
+    iv = lut[jnp.minimum(v3, cap)]
+    known = (iv >= 0).all(axis=0)
+    realiz = known & A.real_table[jnp.maximum(iv[0], 0),
+                                  jnp.maximum(iv[1], 0),
+                                  jnp.maximum(iv[2], 0)]
+    probe_ok = in_menu & not_cur & realiz                      # [B]
+    n_cands = probe_ok.sum().astype(points.dtype)
+
+    # ---- construct + evaluate (incumbent as row 0) -------------------
+    E = cb_row.shape[0]
+    cbB = jnp.broadcast_to(cb_row[None, :], (B, E))
+    p_si, p_so, p_kk = _scatter_triple(
+        static, gran, A, clamp,
+        jnp.broadcast_to(si[None, :], (B, n)),
+        jnp.broadcast_to(so[None, :], (B, n)),
+        jnp.broadcast_to(kk[None, :], (B, n)),
+        cbB, jnp.full((B,), j, idt), v3)
+    SI = jnp.concatenate([si[None, :], p_si], axis=0)          # [B+1, n]
+    SO = jnp.concatenate([so[None, :], p_so], axis=0)
+    KK = jnp.concatenate([kk[None, :], p_kk], axis=0)
+    res = _eval_core(static, A, SI, SO, KK,
+                     jnp.broadcast_to(cb_row[None, :], (B + 1, E)))
+
+    # ---- decision quantities (the scalar b_cost / resource vector) ---
+    t_row = jnp.take(res["part_times"], pidx, axis=1)          # [B+1]
+    w = jnp.where(part_mask[None, :],
+                  A.weight_bytes[None, :] / SO.astype(fdt), 0.0).sum(axis=1)
+    tcost = A.reconf_fixed_s + w / A.dma_bw                    # t_conf(part)
+    cost = t_row + jnp.where(pidx > 0, amort * tcost,
+                             jnp.zeros((), fdt))
+    t_part = cost[0]
+    coll = res["node_collective"].sum(axis=1)
+    resd = res["node_resident"].sum(axis=1)
+    dr0 = coll - coll[0]
+    dr1 = resd - resd[0]
+    improving = res["feasible"] & (cost < t_part - 1e-15)
+    valid = improving & jnp.concatenate(
+        [jnp.zeros((1,), bool), probe_ok])
+    any_valid = valid.any()
+
+    # lexicographic (dr0, dr1) argmin over valid rows, first index wins —
+    # exactly the scalar `dr < best[0]` strict-less update in probe order
+    d0 = jnp.where(valid, dr0, jnp.inf)
+    m0 = d0.min()
+    tie0 = valid & (dr0 == m0)
+    d1 = jnp.where(tie0, dr1, jnp.inf)
+    m1 = d1.min()
+    sel = jnp.argmax(tie0 & (dr1 == m1))
+
+    # ---- apply the move / block the node -----------------------------
+    si2 = jnp.where(any_valid, jnp.take(SI, sel, axis=0), si)
+    so2 = jnp.where(any_valid, jnp.take(SO, sel, axis=0), so)
+    kk2 = jnp.where(any_valid, jnp.take(KK, sel, axis=0), kk)
+    pid1 = jnp.concatenate(
+        [jnp.zeros((1,), idt), jnp.cumsum(cb_row.astype(idt))])
+    same_part = pid1 == pid1[j]
+    sg_j = A.scan_group[j]
+    oh_j = iota_n == j
+    unblock = jnp.zeros(n, bool)
+    for g in gran:                       # static: the Python loop unrolls
+        # NOTE: scope here is the raw Backend.scope — no decode split-KV
+        # exclusion, matching the scalar unblock loop
+        unblock = unblock | _scope_mask(g, same_part, A.scan_group, sg_j,
+                                        oh_j)
+    blocked2 = jnp.where(any_valid, blocked & ~unblock, blocked | oh_j)
+    return si2, so2, kk2, blocked2, points + n_cands
+
+
+def _rb_descend_core(static: StaticSpec, gran: Tuple[str, str, str],
+                     A: DeviceArrays, menus, menu_sizes, clamp,
+                     si, so, kk, cb_row, part_mask, pidx, amort, cap):
+    """Algorithm 2 lines 1-8 as ONE device loop: the greedy descent runs
+    as a ``lax.while_loop`` whose body is the fused probe-construct →
+    evaluate → argmax-select step (``_rb_step``), terminating — exactly
+    like the scalar loop — when every partition node is blocked or the
+    step cap (``max(512, 16·|part|)``, host-computed data) is reached.
+    Returns (si, so, kk, probe_points). ``cap == 0`` makes the whole
+    descent a no-op, which is how the vmapped fleet masks lanes whose
+    problem has no pending descent (and how lanes that converge early
+    idle while the rest of the bucket finishes)."""
+    n = static.n_nodes
+    idt = A.batch.dtype
+
+    def cond(carry):
+        si, so, kk, blocked, points, step = carry
+        return (step < cap) & (part_mask & ~blocked).any()
+
+    def body(carry):
+        si, so, kk, blocked, points, step = carry
+        si, so, kk, blocked, points = _rb_step(
+            static, gran, A, menus, menu_sizes, clamp, cb_row, part_mask,
+            pidx, amort, si, so, kk, blocked, points)
+        return (si, so, kk, blocked, points, step + 1)
+
+    carry = (si, so, kk, jnp.zeros(n, bool), jnp.zeros((), idt),
+             jnp.zeros((), idt))
+    si, so, kk, _, points, _ = jax.lax.while_loop(cond, body, carry)
+    return si, so, kk, points
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def _rb_descend(static: StaticSpec, gran: Tuple[str, str, str],
+                A: DeviceArrays, menus, menu_sizes, clamp,
+                si, so, kk, cb_row, part_mask, pidx, amort, cap):
+    TRACE_COUNTS["rb_descend"] += 1
+    return _rb_descend_core(static, gran, A, menus, menu_sizes, clamp,
+                            si, so, kk, cb_row, part_mask, pidx, amort, cap)
+
+
+class DeviceRuleBased:
+    """Device-resident Algorithm-2 greedy descent for one Problem.
+
+    ``descend(v, part)`` answers one ``rule_based._algorithm2`` request:
+    the whole greedy descent of that partition is ONE jitted
+    ``lax.while_loop`` call (``_rb_descend``) — probe construction,
+    evaluation, selection and the step loop never leave the device — and
+    the chosen move sequence is identical to the scalar reference (the
+    decision quantities agree to float tolerance and ties break in the
+    same probe order; tests assert the resulting designs match bitwise).
+    Reuses the SA move tables (``build_sa_tables``): menus, sizes and the
+    per-node clamp are exactly ``backend.candidates`` + ``set_fold``'s
+    divisor walk-down. Padding (``pad_nodes``/``pad_menu``/...) follows
+    the fleet stacking contract; padded nodes are never in ``part`` and
+    padded menu slots fail the in-menu test, so they cannot be probed.
+    """
+
+    def __init__(self, problem, *, pad_nodes: Optional[int] = None,
+                 pad_menu: Optional[int] = None,
+                 pad_pairs: Optional[int] = None,
+                 pad_vals: Optional[int] = None,
+                 pad_lut: Optional[int] = None, tables=None):
+        self.problem = problem
+        self.jev = JaxEvaluator.from_problem(problem, pad_nodes=pad_nodes,
+                                             pad_pairs=pad_pairs,
+                                             pad_vals=pad_vals,
+                                             pad_lut=pad_lut)
+        self.static, self.A = self.jev.static, self.jev.arrays
+        self.n_real = len(problem.graph.nodes)
+        idt = np.int64 if self.A.batch.dtype == jnp.int64 else np.int32
+        if tables is None:
+            tables = build_sa_tables(problem, pad_nodes=self.static.n_nodes,
+                                     pad_menu=pad_menu)
+        menus, menu_sizes, clamp, _kv_fix, gran, _ = tables
+        self.menus = jnp.asarray(menus, idt)
+        self.menu_sizes = jnp.asarray(menu_sizes, idt)
+        self.clamp = jnp.asarray(clamp, idt)
+        self.gran = gran
+        # Eq. 3/4 reconfiguration amortisation, as in optimise_partition
+        self.amort = (1.0 if problem.objective == "latency"
+                      else 1.0 / max(problem.batch_amortisation, 1))
+
+    # ------------------------------------------------------------------
+    def pack_request(self, v: Variables, part):
+        """Host -> device lowering of one descent request (fleet-shared)."""
+        n = self.static.n_nodes
+        pad = n - self.n_real
+        av = lambda t: np.pad(np.asarray(t, np.int64), (0, pad),
+                              constant_values=1)
+        cb_row = np.zeros(max(n - 1, 0), bool)
+        for cut in v.cuts:
+            cb_row[cut] = True
+        part_mask = np.zeros(n, bool)
+        part_mask[list(part)] = True
+        pidx = sum(1 for cut in v.cuts if cut < part[0])
+        cap = max(512, 16 * len(part))
+        return (av(v.s_in), av(v.s_out), av(v.kern), cb_row, part_mask,
+                pidx, cap)
+
+    def unpack(self, v: Variables, o_si, o_so, o_kk, pts):
+        nr = self.n_real
+        v2 = Variables(v.cuts,
+                       tuple(int(x) for x in np.asarray(o_si)[:nr]),
+                       tuple(int(x) for x in np.asarray(o_so)[:nr]),
+                       tuple(int(x) for x in np.asarray(o_kk)[:nr]))
+        self.problem.note_batch_evals(int(pts))
+        return v2, int(pts)
+
+    def descend(self, v: Variables, part):
+        idt = self.A.batch.dtype
+        fdt = self.A.flops.dtype
+        si, so, kk, cb_row, part_mask, pidx, cap = self.pack_request(v, part)
+        o_si, o_so, o_kk, pts = _rb_descend(
+            self.static, self.gran, self.A, self.menus, self.menu_sizes,
+            self.clamp, jnp.asarray(si, idt), jnp.asarray(so, idt),
+            jnp.asarray(kk, idt), jnp.asarray(cb_row),
+            jnp.asarray(part_mask), jnp.asarray(pidx, idt),
+            jnp.asarray(self.amort, fdt), jnp.asarray(cap, idt))
+        return self.unpack(v, o_si, o_so, o_kk, pts)

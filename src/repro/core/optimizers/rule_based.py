@@ -227,18 +227,29 @@ def _seeded_candidates(problem: Problem) -> List[Variables]:
     return seeds
 
 
-def optimise(problem: Problem,
-             time_budget_s: Optional[float] = None,
-             multi_start: bool = True,
-             engine: str = "numpy") -> OptimResult:
-    # ``engine`` selects how Algorithm 2's probes evaluate: "scalar" keeps
-    # the original one-evaluate-per-probe loop; everything else ("numpy",
-    # "auto", "jax") batches each greedy step's probe set through
-    # BatchedEvaluator.evaluate_batch. The probe batches are a few dozen
-    # points, far below jit break-even, so the jax engine intentionally
-    # shares the numpy probe path here.
-    from repro.core.accel import resolve_engine
-    batch_probes = resolve_engine(engine, allow_fallback=False) != "scalar"
+def _algorithm2(problem: Problem,
+                time_budget_s: Optional[float] = None,
+                multi_start: bool = True):
+    """Algorithm 2's control flow as a GENERATOR of descent requests.
+
+    Yields ``(v, part)`` every time a partition must be greedily optimised
+    (lines 1-8) and expects ``(v_optimised, probe_points)`` back via
+    ``send``; returns the final ``OptimResult`` through ``StopIteration``.
+    All other work — seeding, merge heuristics, repair, objective
+    comparisons, history bookkeeping — happens here on the host, in
+    float64, through the scalar reference ``problem.evaluate``.
+
+    This split is what lets every engine (and the fleet) share ONE copy of
+    the outer merge loop: the scalar/numpy engines answer each request
+    with the host ``optimise_partition``, the jax engine with the jitted
+    device descent (``core/accel/search_loops.DeviceRuleBased``), and
+    ``core/accel/fleet.fleet_rule_based`` round-robins MANY problems'
+    generators against one vmapped descent so a whole portfolio's greedy
+    descents advance in lockstep. As long as a driver returns the same
+    optimised folds the scalar reference would, the chosen merge sequence
+    — and hence the final design, objective and history — is identical by
+    construction.
+    """
     graph = problem.graph
     start = time.perf_counter()
     points = 0
@@ -248,8 +259,7 @@ def optimise(problem: Problem,
 
     # lines 10-12: optimise partitions independently
     for part in partitions_from_cuts(graph, v.cuts):
-        v, p = optimise_partition(problem, v, part,
-                                  batch_probes=batch_probes)
+        v, p = yield (v, part)
         points += p
     history.append((points, problem.evaluate(v).objective))
 
@@ -263,8 +273,7 @@ def optimise(problem: Problem,
                 break
             sv = seed
             for part in partitions_from_cuts(graph, sv.cuts):
-                sv, p = optimise_partition(problem, sv, part,
-                                           batch_probes=batch_probes)
+                sv, p = yield (sv, part)
                 points += p
             ev = problem.evaluate(sv)
             points += 1
@@ -317,8 +326,7 @@ def optimise(problem: Problem,
                 target = next(p for p in new_parts if part[0] in p)
                 v2 = problem.backend.propagate(graph, v2)
                 v2 = repair(problem, v2)
-                v2, p = optimise_partition(problem, v2, target,
-                                           batch_probes=batch_probes)
+                v2, p = yield (v2, target)
                 points += p
                 ev2 = problem.evaluate(v2)
                 points += 1
@@ -355,11 +363,49 @@ def optimise(problem: Problem,
         if not removed:
             break
     for part in partitions_from_cuts(graph, v.cuts):
-        v, p = optimise_partition(problem, v, part,
-                                  batch_probes=batch_probes)
+        v, p = yield (v, part)
         points += p
     history.append((points, problem.evaluate(v).objective))
 
     elapsed = time.perf_counter() - start
     return OptimResult(v, problem.evaluate(v), points, elapsed, history,
                        name="rule_based")
+
+
+def drive(gen, descend) -> OptimResult:
+    """Run an ``_algorithm2`` generator to completion against a descent
+    callable ``descend(v, part) -> (v_optimised, probe_points)``."""
+    try:
+        req = next(gen)
+        while True:
+            req = gen.send(descend(*req))
+    except StopIteration as stop:
+        return stop.value
+
+
+def optimise(problem: Problem,
+             time_budget_s: Optional[float] = None,
+             multi_start: bool = True,
+             engine: str = "numpy") -> OptimResult:
+    # ``engine`` selects how Algorithm 2's greedy descents run: "scalar"
+    # keeps the original one-evaluate-per-probe loop; "numpy" (default)
+    # batches each greedy step's probe set through
+    # BatchedEvaluator.evaluate_batch; "jax" runs the WHOLE descent —
+    # probe construction, evaluation, argmax selection and the step loop —
+    # as one jitted lax.while_loop program on the accelerator
+    # (core/accel/search_loops.DeviceRuleBased), choosing the identical
+    # move sequence. The outer merge loop (_algorithm2) is shared verbatim
+    # by all three.
+    from repro.core.accel import resolve_engine
+    eng = resolve_engine(engine, allow_fallback=False)
+    if eng == "jax":
+        from repro.core.accel.search_loops import DeviceRuleBased
+        descend = DeviceRuleBased(problem).descend
+    else:
+        batch_probes = eng != "scalar"
+
+        def descend(v, part):
+            return optimise_partition(problem, v, part,
+                                      batch_probes=batch_probes)
+
+    return drive(_algorithm2(problem, time_budget_s, multi_start), descend)

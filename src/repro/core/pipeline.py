@@ -26,11 +26,12 @@ choice through. ``auto`` resolves to ``jax`` when jax is importable, else
   numpy    chunked batches through    chains>1: lockstep       each greedy step's
            the vectorised host        parallel tempering, one  probe set as one
            array program             batched evaluate/sweep    batched evaluate
-  jax      on-device mixed-radix      whole multi-chain sweep  numpy probe path
-           candidate decode + jitted  loop on device           (probe batches are
-           evaluate (identical        (lax.scan + jax.random;  far below jit
-           optimum & history to       per-chain incumbents;    break-even)
-           numpy)                     different rng than host)
+  jax      on-device mixed-radix      whole multi-chain sweep  whole greedy
+           candidate decode + jitted  loop on device           descent on device
+           evaluate (identical        (lax.scan + jax.random;  (lax.while_loop;
+           optimum & history to       per-chain incumbents;    identical move
+           numpy)                     different rng than host) sequence, design &
+                                                               history to scalar)
 
 Platform notes: the jax engine jit-compiles per trace shape — mode,
 backend rule flags, ModelOptions and padded array shapes — and NOT per
@@ -124,8 +125,13 @@ def optimise_portfolio(archs: Sequence, shapes,
     so a mixed-platform portfolio shares executables exactly like a
     single-platform one: this is the paper's Table-IV "many networks onto
     many devices" sweep, and f-CNN^x's pick-the-best-platform-per-model
-    scenario, as one call. With the ``jax`` engine (the ``auto`` default
-    when jax is installed) the problems are bucketed by trace signature —
+    scenario, as one call. ``objective`` too is one name or a matching
+    per-problem sequence: the Eq. 5 objective and the Eq. 4 amortisation
+    factor are device data as well, so latency- and throughput-objective
+    problems share one bucket and one executable. Mismatched sequence
+    lengths raise ``ValueError`` up front. With the ``jax`` engine (the
+    ``auto`` default when jax is installed) the problems are bucketed by
+    trace signature —
     NOT by platform — padded to a common shape and searched by ONE
     vmapped XLA executable per bucket (``core/accel/fleet.py``); per-
     problem optima, objectives and improvement histories are identical to
@@ -134,44 +140,74 @@ def optimise_portfolio(archs: Sequence, shapes,
     jax the portfolio degrades to a per-problem loop on the requested
     host engine.
 
-    Fleet sweeps cover ``optimiser="brute_force"`` (vmapped chunk decode)
-    and ``"annealing"`` (vmapped multi-chain device SA with on-device
-    repair); other optimisers run the per-problem loop. Returns one
-    ``ShardingPlan`` per arch, in input order.
+    Fleet sweeps cover all three optimisers: ``"brute_force"`` (vmapped
+    chunk decode), ``"annealing"`` (vmapped multi-chain device SA with
+    on-device repair) and ``"rule_based"`` (every problem's Algorithm-2
+    greedy descents answered by one vmapped device program per round,
+    lanes that converge early idling as no-ops). A portfolio may mix
+    platforms AND objectives without splitting executables — both are
+    device data. Returns one ``ShardingPlan`` per arch, in input order.
     """
     from repro.configs import get_arch
     from repro.core.accel import resolve_engine
 
+    # Validate the three input sequences up front with clear errors: a
+    # silent zip truncation (or a bare string iterated character by
+    # character) used to surface as a baffling failure deep in the
+    # lowering instead of here.
+    if isinstance(archs, str):
+        raise ValueError(
+            f"archs must be a sequence of ArchConfigs or registry names; "
+            f"got the single string {archs!r} — wrap it in a list")
     archs = [get_arch(a) if isinstance(a, str) else a for a in archs]
-    if isinstance(shapes, ShapeSpec):
-        shapes = [shapes] * len(archs)
+    if isinstance(shapes, str) or isinstance(platform, str):
+        which = "shapes" if isinstance(shapes, str) else "platform"
+        raise ValueError(f"{which} must not be a string — a string would "
+                         f"iterate character by character; pass a "
+                         f"ShapeSpec/Platform or a sequence of them")
+    shapes = [shapes] * len(archs) if isinstance(shapes, ShapeSpec) \
+        else list(shapes)
     if len(shapes) != len(archs):
-        raise ValueError(f"got {len(archs)} archs but {len(shapes)} shapes")
+        raise ValueError(f"got {len(archs)} archs but {len(shapes)} "
+                         f"shapes; pass one ShapeSpec or exactly one "
+                         f"shape per arch")
     platforms = [platform] * len(archs) if isinstance(platform, Platform) \
         else list(platform)
     if len(platforms) != len(archs):
         raise ValueError(f"got {len(archs)} archs but {len(platforms)} "
-                         f"platforms")
-    problems = [make_problem(a, s, p, backend, objective, exec_model, opts)
-                for a, s, p in zip(archs, shapes, platforms)]
+                         f"platforms; pass one Platform or exactly one "
+                         f"platform per arch")
+    objectives = [objective] * len(archs) if isinstance(objective, str) \
+        else list(objective)
+    if len(objectives) != len(archs):
+        raise ValueError(f"got {len(archs)} archs but {len(objectives)} "
+                         f"objectives; pass one objective or exactly one "
+                         f"per arch")
+    problems = [make_problem(a, s, p, backend, o, exec_model, opts)
+                for a, s, p, o in zip(archs, shapes, platforms, objectives)]
     eng = resolve_engine(engine, allow_fallback=False)
     fleet_kw = {
         "brute_force": {"include_cuts", "max_cuts", "max_points",
                         "batch_size"},
         "annealing": {"seed", "k_start", "k_min", "cooling", "max_iters",
                       "objective_scale", "chains"},
+        "rule_based": {"multi_start"},
     }
-    # the fleet covers the kwargs above; anything else (time_budget_s,
-    # swap_interval, ...) routes through the per-problem loop, whose
-    # results the fleet is bit-identical to anyway
+    # the fleet covers the kwargs above; anything else routes through the
+    # per-problem loop, whose results the fleet is bit-identical to
+    # anyway. time_budget_s in particular must NOT enter a fleet: budget
+    # clocks inside a lockstep bucket would measure the whole portfolio's
+    # wall time and truncate each problem differently than its own loop.
     if eng == "jax" and optimiser in fleet_kw \
             and set(optimiser_kwargs) <= fleet_kw[optimiser]:
         from repro.core.accel.fleet import (
             fleet_annealing,
             fleet_brute_force,
+            fleet_rule_based,
         )
-        runner = fleet_brute_force if optimiser == "brute_force" \
-            else fleet_annealing
+        runner = {"brute_force": fleet_brute_force,
+                  "annealing": fleet_annealing,
+                  "rule_based": fleet_rule_based}[optimiser]
         results = runner(problems, **optimiser_kwargs)
     else:
         results = [OPTIMIZERS[optimiser](p, engine=eng, **optimiser_kwargs)

@@ -1,6 +1,8 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
 see the real single CPU device (the 512-device override belongs exclusively
 to launch/dryrun.py)."""
+import contextlib
+
 import pytest
 
 from repro.configs import ARCHS, get_arch, reduced
@@ -31,6 +33,49 @@ from repro.core.platform import Platform
 
 TINY_SHAPE = ShapeSpec("train_tiny", 256, 16, "train")
 TINY_DECODE = ShapeSpec("decode_tiny", 256, 16, "decode")
+
+
+@pytest.fixture
+def assert_max_traces():
+    """Context manager asserting the jitted accel entry points trace at
+    most ``n`` times inside the block — the no-recompile contract.
+
+    ``TRACE_COUNTS`` (core/accel/eval_jax.py) ticks once per TRACE of each
+    jitted engine entry point, never per call, so this fixture turns
+    "one executable serves the whole portfolio / platform mix / objective
+    mix" claims into assertions::
+
+        with assert_max_traces(1):
+            fleet_brute_force(problems, ...)
+
+        with assert_max_traces(2, keys=("sa_sweeps",)):   # one entry point
+            sa.run(...); sa.run(...)
+
+    ``keys=None`` counts every entry point (brute-force chunks, SA sweeps,
+    rule-based descents, standalone evaluate — per-problem and fleet).
+    ``exact=True`` requires exactly ``n`` traces instead of at most ``n``
+    — use it where the block's shapes are unique in the suite, so a
+    silently dropped counter (or a stale uniqueness assumption serving
+    the call from cache) fails instead of passing vacuously at 0.
+    """
+    from repro.core.accel.eval_jax import TRACE_COUNTS
+
+    @contextlib.contextmanager
+    def _ctx(n: int, keys=None, exact: bool = False):
+        watched = tuple(keys) if keys is not None else tuple(TRACE_COUNTS)
+        before = {k: TRACE_COUNTS[k] for k in watched}
+        yield TRACE_COUNTS
+        grew = {k: TRACE_COUNTS[k] - before[k] for k in watched
+                if TRACE_COUNTS[k] != before[k]}
+        total = sum(grew.values())
+        if exact:
+            assert total == n, \
+                f"expected exactly {n} traces, got {total}: {grew}"
+        else:
+            assert total <= n, \
+                f"expected <= {n} traces, got {total}: {grew}"
+
+    return _ctx
 
 
 @pytest.fixture(scope="session")

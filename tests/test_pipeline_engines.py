@@ -121,6 +121,37 @@ def test_portfolio_shape_broadcast_and_validation():
     assert len(plans) == 1
 
 
+def test_portfolio_mismatched_lengths_raise_up_front():
+    """Mismatched archs/shapes/platform/objective sequence lengths (and a
+    bare string for archs) raise a clear ValueError before any lowering
+    happens — never a silent zip truncation or a deep lowering error.
+    Host-engine cells: this must pass without jax."""
+    from repro.core.pipeline import optimise_portfolio
+
+    archs = [_arch(), _arch()]
+    kw = dict(optimiser="brute_force", engine="numpy", max_points=8,
+              batch_size=8)
+    with pytest.raises(ValueError, match="shapes"):
+        optimise_portfolio(archs, [SHAPE] * 3, PLAT, **kw)
+    with pytest.raises(ValueError, match="platforms"):
+        optimise_portfolio(archs, SHAPE, [PLAT], **kw)
+    with pytest.raises(ValueError, match="objectives"):
+        optimise_portfolio(archs, SHAPE, PLAT,
+                           objective=["latency"] * 3, **kw)
+    with pytest.raises(ValueError, match="single string"):
+        optimise_portfolio("tinyllama-1.1b", SHAPE, PLAT, **kw)
+    with pytest.raises(ValueError, match="shapes must not be a string"):
+        optimise_portfolio(archs, "train", PLAT, **kw)
+    with pytest.raises(ValueError, match="platform must not be a string"):
+        optimise_portfolio(archs, SHAPE, "t-4x4", **kw)
+    # generator inputs are materialised up front, not zip-truncated
+    plans = optimise_portfolio(archs, (s for s in [SHAPE, SHAPE]),
+                               (p for p in [PLAT, PLAT]),
+                               objective=(o for o in
+                                          ["latency", "throughput"]), **kw)
+    assert len(plans) == 2
+
+
 def test_portfolio_per_problem_platforms_on_host_engines():
     """A heterogeneous-platform portfolio works on every engine — the
     numpy per-problem loop included (this cell must pass without jax)."""
