@@ -16,6 +16,12 @@
 # The docs lane (tools/check_docs.py) runs first: README/docs code blocks
 # must parse and resolve against the live package and intra-repo links
 # must exist, so the documentation cannot rot silently.
+#
+# The static lane (tools/check_static.py, see docs/static_analysis.md)
+# runs next, twice: once in the ambient mode (jaxpr audit included when
+# jax is importable) and once forced to --mode nojax, so the AST pack's
+# no-jax guarantee is exercised even on a jax-equipped machine. Both
+# gate on the checked-in baseline (tools/static_baseline.json).
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -32,5 +38,8 @@ if ! python -c "import repro" >/dev/null 2>&1; then
 fi
 
 python tools/check_docs.py
+
+python tools/check_static.py --fail-on-new
+python tools/check_static.py --fail-on-new --mode nojax
 
 python -m pytest -x -q --durations=25 -m "not slow" "$@"

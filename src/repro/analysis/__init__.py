@@ -1,0 +1,130 @@
+"""Static analysis for the engine stack's trace, dtype and recompile
+invariants.
+
+The accel engines' correctness story rests on invariants that are easy to
+break silently and expensive to debug at runtime:
+
+  * every optimiser schedule is ONE cached device program — no host
+    round-trips (callbacks, debug prints) inside a jitted body;
+  * the jax results sit on the scalar==jax differential boundary — the
+    x64 regime must be pure float64 end to end (a stray float32 constant
+    silently halves the 1e-9 contract to 1e-5);
+  * ``StaticSpec`` carries ONLY trace-shaping configuration — anything
+    that varies across (arch, platform, objective) must be a
+    ``DeviceArrays`` leaf, or every new platform recompiles the world
+    (the exact regression class PRs 4-5 fixed by hand);
+  * the fleet's hot gathers keep the problem axis flattened into the
+    index space — a vmap-batched large gather scalarises on XLA CPU
+    (the PR 3 fleet-decode pitfall);
+  * modules in the ``REPRO_NO_JAX`` import matrix never import jax at
+    module scope, jitted bodies never branch on traced values in Python,
+    and tests never draw unseeded randomness.
+
+``assert_max_traces`` and the randomized differential suite check these
+dynamically on the paths the tests happen to execute; this package checks
+them *statically*, on every commit, over every lowered engine entry point:
+
+  ast_rules.py       pure-AST lint pack — runs WITHOUT jax installed
+                     (the no-jax CI lane runs exactly this front-end).
+  recompile_lint.py  builds ``StaticSpec`` for an example
+                     (arch, platform, objective) grid via the pure-host
+                     ``lowering.build_static_spec`` hook and flags any
+                     field whose value varies — also jax-free.
+  jaxpr_audit.py     lowers every engine entry point with
+                     ``jax.make_jaxpr`` and walks the jaxprs (requires
+                     jax).
+
+``tools/check_static.py`` drives all three, emits a machine-readable JSON
+report (with per-rule timings) and compares it against the checked-in
+baseline (``tools/static_baseline.json``) so new violations fail CI while
+explicitly justified ones are carried.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass, field
+from typing import Dict, List, Optional
+
+
+@dataclass(frozen=True)
+class Violation:
+    """One finding of one rule.
+
+    ``rule``     stable rule id (``ast/eager-jax-import``, ``jaxpr/...``);
+    ``where``    stable location — ``path:qualname`` for AST findings,
+                 ``entry:<name>`` for jaxpr findings, ``StaticSpec.<field>``
+                 for recompile findings. Deliberately line-free so baseline
+                 entries survive unrelated edits;
+    ``message``  human-readable detail (may include line numbers);
+    ``line``     best-effort line number for terminal output (0 = n/a).
+    """
+
+    rule: str
+    where: str
+    message: str
+    line: int = 0
+
+    @property
+    def key(self) -> str:
+        """Baseline identity: rule + location, never the free-text part."""
+        return f"{self.rule}::{self.where}"
+
+    def format(self) -> str:
+        loc = f"{self.where}:{self.line}" if self.line else self.where
+        return f"{loc}: [{self.rule}] {self.message}"
+
+
+@dataclass
+class RuleReport:
+    """Per-rule outcome: findings plus wall time (--durations-style)."""
+
+    rule: str
+    violations: List[Violation] = field(default_factory=list)
+    seconds: float = 0.0
+
+
+@dataclass
+class Report:
+    """The full analyzer output; serialises to the JSON the CI lane and
+    the baseline workflow consume."""
+
+    mode: str                                 # "jax" | "nojax"
+    rules: List[RuleReport] = field(default_factory=list)
+
+    @property
+    def violations(self) -> List[Violation]:
+        return [v for r in self.rules for v in r.violations]
+
+    def extend(self, other: "Report") -> None:
+        self.rules.extend(other.rules)
+
+    def to_json(self, baseline: Optional[Dict[str, str]] = None) -> dict:
+        vs = self.violations
+        out = {
+            "mode": self.mode,
+            "rules": {
+                r.rule: {"violations": len(r.violations),
+                         "seconds": round(r.seconds, 4)}
+                for r in self.rules
+            },
+            "violations": [asdict(v) | {"key": v.key} for v in vs],
+        }
+        if baseline is not None:
+            keys = {v.key for v in vs}
+            out["new"] = sorted(k for k in keys if k not in baseline)
+            out["fixed"] = sorted(k for k in baseline if k not in keys)
+        return out
+
+
+def load_baseline(path: str) -> Dict[str, str]:
+    """Baseline file -> {violation key: justification}. Missing file ==
+    empty baseline (the desired steady state)."""
+    try:
+        with open(path, encoding="utf-8") as f:
+            data = json.load(f)
+    except FileNotFoundError:
+        return {}
+    return dict(data.get("accepted", {}))
+
+
+__all__ = ["Violation", "RuleReport", "Report", "load_baseline"]

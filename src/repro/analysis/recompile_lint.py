@@ -1,0 +1,140 @@
+"""Recompile-key linter: nothing problem-shaped may hide in ``StaticSpec``.
+
+``StaticSpec`` is the XLA executable cache key. The engine stack's whole
+fleet story (PRs 3-5) is that two problems differing only in architecture
+data, target platform or objective share ONE spec — per-arch structure,
+platform scalars/tables and the objective selector are ``DeviceArrays``
+leaves, never trace structure. Each of those migrations was a regression
+fixed by hand after someone noticed executables multiplying; this linter
+mechanises the check:
+
+  recompile/spec-varies      build the spec (via the pure-host
+                             ``lowering.build_static_spec`` hook — no jax
+                             needed) for an example grid that varies ONLY
+                             (arch, platform, objective) while holding the
+                             genuinely trace-shaping knobs fixed, and flag
+                             every field whose value differs anywhere in
+                             the grid: that field is data that should be a
+                             ``DeviceArrays`` leaf.
+
+  recompile/spec-field-type  every spec field must be a hashable scalar
+                             (bool/int/float/str). A tuple field is how
+                             the PR-3 regression looked (per-arch index
+                             tuples keying the cache); an array field
+                             would not even hash.
+
+The example grid is deliberately tiny (reduced configs; spec construction
+is pure host arithmetic) so the lint costs milliseconds in CI.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence
+
+from repro.analysis import Violation
+from repro.core.accel.lowering import StaticSpec, build_static_spec
+
+#: field types a hashable, cheap, honest cache key is made of
+SCALAR_TYPES = (bool, int, float, str)
+
+#: grid axes: vary one problem dimension at a time; everything in the
+#: same grid must produce the SAME spec. (arch names resolve through
+#: ``repro.configs``; platforms/objectives are built in ``example_grid``.)
+GRID_ARCHS = ("tinyllama-1.1b", "granite-moe-1b-a400m")
+GRID_OBJECTIVES = ("latency", "throughput")
+
+
+def example_grid() -> List:
+    """The (arch x platform x objective) example problems the lint (and
+    the jaxpr audit) sweep. Small on purpose; extend here when a new
+    problem axis is supposed to become device data."""
+    from repro.configs import get_arch, reduced
+    from repro.configs.base import ShapeSpec
+    from repro.core.backends import BACKENDS
+    from repro.core.graph_builder import build_hdgraph
+    from repro.core.objectives import Problem
+    from repro.core.platform import AbstractPlatform, Platform
+
+    shape = ShapeSpec("lint_train", 256, 16, "train")
+    platforms = [
+        Platform(name="lint-4x4",
+                 mesh_axes=(("data", 4), ("model", 4))),
+        Platform(name="lint-2x8", mesh_axes=(("data", 2), ("model", 8)),
+                 hbm_bytes=8 * 2**30, ici_bw=25e9),
+        AbstractPlatform(name="lint-abs-16",
+                         mesh_axes=(("data", 4), ("model", 4))),
+    ]
+    problems = []
+    for arch_name in GRID_ARCHS:
+        graph = build_hdgraph(reduced(get_arch(arch_name)), shape)
+        for plat in platforms:
+            for obj in GRID_OBJECTIVES:
+                problems.append(Problem(
+                    graph=graph, platform=plat, backend=BACKENDS["spmd"],
+                    objective=obj, exec_model="spmd",
+                    batch_amortisation=64 if obj == "throughput" else 256))
+    return problems
+
+
+def lint_specs(specs: Dict[str, StaticSpec]) -> List[Violation]:
+    """Flag every field that varies across labelled specs that are all
+    supposed to share one executable."""
+    out: List[Violation] = []
+    items = list(specs.items())
+    if len(items) < 2:
+        return out
+    for f in dataclasses.fields(StaticSpec):
+        seen: Dict[object, str] = {}
+        for label, spec in items:
+            seen.setdefault(getattr(spec, f.name), label)
+        if len(seen) > 1:
+            vals = ", ".join(f"{label}={val!r}"
+                             for val, label in list(seen.items())[:4])
+            out.append(Violation(
+                rule="recompile/spec-varies",
+                where=f"StaticSpec.{f.name}",
+                message=(
+                    f"value varies across the example grid ({vals}) — "
+                    f"problem-shaped data must be a DeviceArrays leaf, "
+                    f"not an executable cache key (lowering.py)")))
+    return out
+
+
+def lint_field_types(spec: StaticSpec) -> List[Violation]:
+    out: List[Violation] = []
+    for f in dataclasses.fields(StaticSpec):
+        val = getattr(spec, f.name)
+        if not isinstance(val, SCALAR_TYPES):
+            out.append(Violation(
+                rule="recompile/spec-field-type",
+                where=f"StaticSpec.{f.name}",
+                message=(
+                    f"field holds a {type(val).__name__}, not a scalar "
+                    f"(bool/int/float/str) — structured values in the "
+                    f"cache key are the PR-3 per-arch-tuple regression")))
+    return out
+
+
+def run(problems: Sequence = None) -> Dict[str, List[Violation]]:
+    """Run both recompile rules over the example grid (default) or the
+    given problems. Specs are padded to the grid's max node count first —
+    exactly what the fleet does — so node-count differences are, by
+    construction, not findings."""
+    if problems is None:
+        problems = example_grid()
+    bevs = [p.batched() for p in problems]
+    pad = max(b.n_nodes for b in bevs)
+    specs = {
+        f"{p.graph.arch_name}/{p.platform.name}/{p.objective}":
+            build_static_spec(b, pad_nodes=pad)
+        for p, b in zip(problems, bevs)
+    }
+    out = {"recompile/spec-varies": lint_specs(specs),
+           "recompile/spec-field-type": []}
+    first = next(iter(specs.values()))
+    out["recompile/spec-field-type"] = lint_field_types(first)
+    return out
+
+
+__all__ = ["example_grid", "lint_specs", "lint_field_types", "run",
+           "SCALAR_TYPES"]

@@ -72,13 +72,25 @@ def jax_available() -> bool:
 
 
 def require_jax(feature: str = "the 'jax' search engine"):
-    """Import and return jax, or raise a clear EngineUnavailable."""
-    if not jax_available():
-        raise EngineUnavailable(
-            f"{feature} requires jax, which is not installed in this "
-            f"environment. Install the 'jax' extra (pip install jax) or "
-            f"select engine='numpy' / engine='scalar' instead.")
-    import jax
+    """Import and return jax, or raise a clear EngineUnavailable.
+
+    The EngineUnavailable chains the real ImportError (``raise ... from``)
+    so the actionable message survives while the underlying cause — a
+    broken install, a missing CUDA lib — stays on the traceback. Under
+    ``REPRO_NO_JAX`` masking there is no import failure to chain; the
+    mask behaves exactly like an absent package.
+    """
+    msg = (f"{feature} requires jax, which is not installed in this "
+           f"environment. Install the 'jax' extra (pip install jax) or "
+           f"select engine='numpy' / engine='scalar' instead.")
+    if os.environ.get("REPRO_NO_JAX", "").lower() not in ("", "0", "false"):
+        raise EngineUnavailable(f"{msg} (masked by REPRO_NO_JAX)")
+    try:
+        import jax
+    except ImportError as err:       # genuinely missing, or broken install
+        raise EngineUnavailable(msg) from err
+    if not jax_available():          # availability hook says no (tests)
+        raise EngineUnavailable(msg)
     return jax
 
 

@@ -219,6 +219,43 @@ def _mask(index_set, n: int, n_pad: int) -> np.ndarray:
     return m
 
 
+def build_static_spec(bev, *, use_pallas: bool = False,
+                      pallas_interpret: bool = False,
+                      pad_nodes: Optional[int] = None) -> StaticSpec:
+    """Pure-host construction of the trace-shaping spec (no jax needed).
+
+    This is the static-analysis hook: ``repro.analysis.recompile_lint``
+    builds specs for a whole (arch, platform, objective) example grid —
+    in the no-jax CI lane too — and flags any field whose value varies
+    across the grid, i.e. data that should have been a ``DeviceArrays``
+    leaf. ``lower_program`` routes through here so the linted spec and
+    the spec that actually keys the XLA executable cache can never drift.
+    Unlike ``lower_program``, ``pallas_interpret`` has no backend-probing
+    default — callers without jax must pick explicitly.
+    """
+    n = bev.n_nodes
+    np_ = n if pad_nodes is None else int(pad_nodes)
+    if np_ < n:
+        raise ValueError(f"pad_nodes={np_} < graph node count {n}")
+    opts = bev.opts
+    return StaticSpec(
+        n_nodes=np_,
+        mode=bev.mode,
+        exec_model=bev.exec_model,
+        strict_kv=bev.strict_kv,
+        intra_matching=bev.intra_matching,
+        inter_matching=bev.inter_matching,
+        scan_tying=bev.scan_tying,
+        zero1=opts.zero1,
+        seq_parallel_stash=opts.seq_parallel_stash,
+        grad_compression=opts.grad_compression,
+        mxu_efficiency=opts.mxu_efficiency,
+        overlap_collectives=opts.overlap_collectives,
+        use_pallas=use_pallas,
+        pallas_interpret=pallas_interpret,
+    )
+
+
 def lower_program(bev, *, use_pallas: bool = False,
                   pallas_interpret: bool | None = None,
                   pad_nodes: Optional[int] = None,
@@ -263,28 +300,11 @@ def lower_program(bev, *, use_pallas: bool = False,
     if pallas_interpret is None:
         pallas_interpret = jax.default_backend() != "tpu"
 
+    static = build_static_spec(bev, use_pallas=use_pallas,
+                               pallas_interpret=pallas_interpret,
+                               pad_nodes=pad_nodes)
     n = bev.n_nodes
-    np_ = n if pad_nodes is None else int(pad_nodes)
-    if np_ < n:
-        raise ValueError(f"pad_nodes={np_} < graph node count {n}")
-
-    opts = bev.opts
-    static = StaticSpec(
-        n_nodes=np_,
-        mode=bev.mode,
-        exec_model=bev.exec_model,
-        strict_kv=bev.strict_kv,
-        intra_matching=bev.intra_matching,
-        inter_matching=bev.inter_matching,
-        scan_tying=bev.scan_tying,
-        zero1=opts.zero1,
-        seq_parallel_stash=opts.seq_parallel_stash,
-        grad_compression=opts.grad_compression,
-        mxu_efficiency=opts.mxu_efficiency,
-        overlap_collectives=opts.overlap_collectives,
-        use_pallas=use_pallas,
-        pallas_interpret=pallas_interpret,
-    )
+    np_ = static.n_nodes
     # the platform scalar vector (batched_eval.PLATFORM_SCALAR_FIELDS
     # order) becomes per-problem device data — never trace structure
     pf, hbw, hby, ibw, dbw, rfs, chips = bev.platform_scalars()

@@ -11,11 +11,13 @@ n-gram backbone so the LM loss actually decreases during the example runs.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Iterator, Optional
+from typing import TYPE_CHECKING, Dict, Iterator, Optional
 
 import numpy as np
 
-import jax.numpy as jnp
+if TYPE_CHECKING:                       # jax only at the device boundary:
+    import jax.numpy as jnp             # the REPRO_NO_JAX matrix imports
+                                        # this module without jax installed
 
 
 @dataclass
@@ -35,8 +37,9 @@ class DataPipeline:
         self._step = 0
 
     # ------------------------------------------------------------------
-    def batch_at(self, step: int) -> Dict[str, jnp.ndarray]:
+    def batch_at(self, step: int) -> Dict[str, "jnp.ndarray"]:
         """Pure function of (seed, step, host shard): the FT contract."""
+        import jax.numpy as jnp
         rows = []
         for b in range(self.local_batch):
             global_row = self.host_index * self.local_batch + b
