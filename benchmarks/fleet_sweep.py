@@ -81,11 +81,15 @@ def _problems(nets, platform=_PLATFORM):
 def _append_accel_row(default_rate: float, fleet_rate: float, nets) -> None:
     """Upsert the fleet aggregate into the accel engine comparison CSV
     (same columns: numpy = per-problem default-engine loop, jax = fleet).
-    Existing fleet rows for the same portfolio are replaced, so reruns
-    don't accumulate duplicates."""
+
+    Every row this writer touches is stamped with the git SHA and
+    timestamp from the run-record layer (``repro/obs/runrecord.py``), so
+    a number in the CSV records WHICH build produced it. Existing fleet
+    rows for the same portfolio are replaced (reruns don't accumulate
+    duplicates); rows and columns written by other lanes are preserved
+    instead of silently dropped."""
+    from repro.obs import runrecord
     path = os.path.join(RESULT_DIR, "accel_engines.csv")
-    cols = ["network", "backend", "numpy_pts_per_s", "jax_pts_per_s",
-            "speedup"]
     name = f"fleet({'+'.join(nets)})"
     rows = []
     if os.path.exists(path):
@@ -94,10 +98,18 @@ def _append_accel_row(default_rate: float, fleet_rate: float, nets) -> None:
     rows.append({"network": name, "backend": "spmd",
                  "numpy_pts_per_s": f"{default_rate:.0f}",
                  "jax_pts_per_s": f"{fleet_rate:.0f}",
-                 "speedup": f"{fleet_rate / max(default_rate, 1e-9):.1f}x"})
+                 "speedup": f"{fleet_rate / max(default_rate, 1e-9):.1f}x",
+                 "git_sha": runrecord.git_sha()[:12],
+                 "written_iso": time.strftime("%Y-%m-%dT%H:%M:%S%z")})
+    cols = ["network", "backend", "numpy_pts_per_s", "jax_pts_per_s",
+            "speedup", "git_sha", "written_iso"]
+    for r in rows:                       # keep columns we don't know about
+        for k in r:
+            if k not in cols:
+                cols.append(k)
     os.makedirs(RESULT_DIR, exist_ok=True)
     with open(path, "w", newline="") as f:
-        w = csv.DictWriter(f, fieldnames=cols)
+        w = csv.DictWriter(f, fieldnames=cols, restval="")
         w.writeheader()
         w.writerows(rows)
 

@@ -9,12 +9,21 @@ their smallest spaces for CI: the accel smoke lane runs the smallest
 Table-IV space, asserts the jax==numpy optimum agreement, and fails if it
 exceeds 60 s. ``--hetero`` switches the ``fleet`` lane to the
 heterogeneous-platform grid (networks x platforms as ONE fleet program;
-see benchmarks/fleet_sweep.py and docs/benchmarks.md)."""
+see benchmarks/fleet_sweep.py and docs/benchmarks.md).
+
+Every lane runs with telemetry enabled (``repro/obs``): on completion a
+run record — spans, metrics, config, git SHA, platform fingerprint — is
+appended to ``experiments/benchmarks/runrecords.jsonl`` and distilled
+into ``BENCH_<lane>.json`` via ``tools/bench_report.py``
+(``docs/observability.md`` documents the schema and how to read a row)."""
 from __future__ import annotations
 
+import os
 import subprocess
 import sys
 import time
+
+from repro.obs import metrics, runrecord, trace
 
 from benchmarks import (
     fig2_optimizer_compare,
@@ -25,6 +34,7 @@ from benchmarks import (
     table5_objectives,
     table6_vs_baseline,
 )
+from benchmarks.common import RESULT_DIR
 
 def run_tests():
     """Test lane: the tier-1 suite with the 25 slowest tests reported
@@ -54,6 +64,31 @@ _ON_DEMAND = ("tests", "accel", "fleet")
 _SMOKEABLE = ("accel", "fleet")
 
 
+def _bench_report():
+    """``tools/bench_report.py`` as a module (tools/ is not a package)."""
+    import importlib.util
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "tools", "bench_report.py")
+    spec = importlib.util.spec_from_file_location("bench_report", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _emit_record(lane: str, config: dict) -> None:
+    """Capture this lane's telemetry into the JSONL trajectory and the
+    flat ``BENCH_<lane>.json`` row. Never aborts a finished lane."""
+    try:
+        record = runrecord.capture(lane, config=config)
+        path = runrecord.append(
+            record, os.path.join(RESULT_DIR, "runrecords.jsonl"))
+        bench = _bench_report().write_bench(record, RESULT_DIR)
+        print(f"[{lane}] run record -> {path}; bench row -> {bench}",
+              flush=True)
+    except Exception as err:                     # pragma: no cover
+        print(f"[{lane}] run record FAILED: {err}", flush=True)
+
+
 def main(argv=None) -> int:
     argv = list(argv if argv is not None else sys.argv[1:])
     smoke = "--smoke" in argv
@@ -71,7 +106,16 @@ def main(argv=None) -> int:
         kwargs = {"smoke": True} if smoke and name in _SMOKEABLE else {}
         if hetero and name == "fleet":
             kwargs["hetero"] = True
-        ret = ALL[name](**kwargs)
+        lane = "fleet_hetero" if (hetero and name == "fleet") else name
+        trace.reset()
+        metrics.reset()
+        trace.enable()
+        try:
+            ret = ALL[name](**kwargs)
+        finally:
+            trace.disable()
+        _emit_record(lane, {"lane": name, "smoke": smoke,
+                            "hetero": hetero and name == "fleet"})
         print(f"[{name}] done in {time.time()-t0:.1f}s", flush=True)
         if isinstance(ret, int) and ret != 0:
             return ret                    # tests lane: propagate pytest's rc

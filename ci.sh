@@ -43,3 +43,21 @@ python tools/check_static.py --fail-on-new
 python tools/check_static.py --fail-on-new --mode nojax
 
 python -m pytest -x -q --durations=25 -m "not slow" "$@"
+
+# The obs smoke step: the smallest accel lane runs with telemetry on
+# (benchmarks/run.py enables it for every lane) and must produce a
+# schema-valid run record plus a parseable BENCH_accel.json row
+# (docs/observability.md). BENCH_OUT points at a scratch dir so local
+# runs never mutate the checked-in experiments/benchmarks files.
+# Skipped without jax: the lane itself is the numpy-vs-jax comparison;
+# the record/report layer is still covered by tests/test_obs.py above.
+if python -c "from repro.core.accel import jax_available as j; raise SystemExit(0 if j() else 1)"; then
+    OBS_OUT="$(mktemp -d)"
+    BENCH_OUT="$OBS_OUT" python -m benchmarks.run accel --smoke
+    python tools/bench_report.py validate "$OBS_OUT/runrecords.jsonl" --lane accel
+    test -s "$OBS_OUT/BENCH_accel.json"
+    rm -rf "$OBS_OUT"
+    echo "ci.sh: obs smoke OK (run record + BENCH row valid)"
+else
+    echo "ci.sh: obs smoke skipped (jax unavailable; record layer covered by tests/test_obs.py)"
+fi

@@ -60,6 +60,7 @@ NO_JAX_PREFIXES: Tuple[str, ...] = (
     "repro/configs/",
     "repro/data/",
     "repro/analysis/",
+    "repro/obs/",
 )
 
 #: the jax-subject accel modules — the only core files allowed to import

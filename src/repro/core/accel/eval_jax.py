@@ -63,11 +63,14 @@ from repro.core.perfmodel import (
 #: incremented inside jitted function bodies — i.e. once per TRACE, not per
 #: call. The no-recompile tests (``assert_max_traces`` in tests/conftest.py)
 #: use this to assert executables are shared across problems, platforms and
-#: objectives. ``search_loops``/``fleet`` re-export and tick the same dict.
-TRACE_COUNTS = {"eval_batch": 0,
-                "sa_sweeps": 0, "bf_chunk": 0, "rb_descend": 0,
-                "fleet_sa_sweeps": 0, "fleet_bf_chunk": 0,
-                "fleet_rb_descend": 0}
+#: objectives. ``search_loops``/``fleet`` re-export and tick the same
+#: mapping. Since PR 7 the ledger lives in the telemetry registry
+#: (``repro.obs.metrics``) as a dict-shaped view over counters; this module
+#: stays its historic import home.
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
+
+TRACE_COUNTS = _metrics.TRACE_COUNTS
 
 
 # ----------------------------------------------------------------------
@@ -442,8 +445,11 @@ class JaxEvaluator:
             kk = np.pad(kk, pad, constant_values=1)
             cb = np.pad(cb, ((0, 0), (0, self.n_pad - 1 - cb.shape[1])),
                         constant_values=False)
-        out = evaluate_batch_jax(self.static, self.arrays, si, so, kk, cb)
-        out = jax.device_get(out)
+        with _metrics.device_dispatch("eval_batch", batch=N):
+            out = evaluate_batch_jax(self.static, self.arrays, si, so,
+                                     kk, cb)
+        with _trace.span("accel.d2h.eval_batch", batch=N):
+            out = jax.device_get(out)
         return BatchResult(
             objective=np.asarray(out["objective"], np.float64),
             feasible=np.asarray(out["feasible"], bool),

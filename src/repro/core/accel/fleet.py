@@ -51,7 +51,6 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-import time
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -79,6 +78,8 @@ from repro.core.optimizers.common import (
     incumbent_better,
     repair,
 )
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
 
 __all__ = ["fleet_brute_force", "fleet_annealing", "fleet_rule_based",
            "bucket_indices"]
@@ -305,6 +306,9 @@ class _BFMember:
         """Identical improvement bookkeeping to the per-problem engine
         (same shared helper)."""
         objs = np.asarray(objs[:take], np.float64)
+        if _trace.enabled():
+            _metrics.histogram("accel.fleet_bf.feasible_fraction").observe(
+                float(np.isfinite(objs).mean()) if take else 0.0)
         self.problem.note_batch_evals(take)
         last_imp, self.best_obj = absorb_improvements(
             objs, self.best_obj, self.points, self.history)
@@ -340,8 +344,17 @@ def fleet_brute_force(problems: Sequence, include_cuts: bool = False,
     time (members search simultaneously — per-problem times don't sum).
     """
     results: List[Optional[OptimResult]] = [None] * len(problems)
-    for idxs in bucket_indices(problems):
-        start = time.perf_counter()
+    with _trace.span("fleet.bucketing", problems=len(problems),
+                     optimiser="brute_force") as bsp:
+        buckets = bucket_indices(problems)
+        bsp.set(buckets=len(buckets))
+    for bi, idxs in enumerate(buckets):
+        # the bucket span is the members' shared wall clock (see the
+        # ``seconds`` note in the docstring) — recorded when tracing is
+        # on, but always timing
+        bucket_sp = _trace.span("fleet.bf.bucket", bucket=bi,
+                                members=len(idxs))
+        bucket_sp.__enter__()
         members = [_BFMember(i, problems[i], include_cuts, max_cuts)
                    for i in idxs]
         n_pad = max(m.n for m in members)
@@ -366,7 +379,10 @@ def fleet_brute_force(problems: Sequence, include_cuts: bool = False,
 
         def absorb(entry):
             out, takes_np, cb_np_k = entry
-            objs, bi_si, bi_so, bi_kk = (np.asarray(x) for x in out)
+            # blocking readback: this span, not the async chunk dispatch,
+            # absorbs the device compute time
+            with _trace.span("fleet.d2h.bf_chunk"):
+                objs, bi_si, bi_so, bi_kk = (np.asarray(x) for x in out)
             for mi, m in enumerate(members):
                 take = int(takes_np[mi])
                 if take > 0:
@@ -417,15 +433,17 @@ def fleet_brute_force(problems: Sequence, include_cuts: bool = False,
                         m.stopped = True
                 if not takes.any():
                     break
-                out = _fleet_bf_chunk(
-                    static, B, k == 0, A, jnp.asarray(descs), sigma_d,
-                    T_d, cb_d, jnp.asarray(takes))
+                with _metrics.device_dispatch("fleet_bf_chunk", bucket=bi):
+                    out = _fleet_bf_chunk(
+                        static, B, k == 0, A, jnp.asarray(descs), sigma_d,
+                        T_d, cb_d, jnp.asarray(takes))
                 pending.append((out, takes, cb_np))
                 if len(pending) > 1:
                     absorb(pending.pop(0))
             for entry in pending:       # drain at the cut-set boundary
                 absorb(entry)
-        elapsed = time.perf_counter() - start
+        bucket_sp.__exit__(None, None, None)
+        elapsed = bucket_sp.elapsed_s()
         for m in members:
             results[m.index] = m.result(elapsed)
     return results
@@ -480,8 +498,14 @@ def fleet_annealing(problems: Sequence, seed: int = 0,
 
     chains = max(chains, 1)
     results: List[Optional[OptimResult]] = [None] * len(problems)
-    for idxs in bucket_indices(problems, tiered=False):
-        start = time.perf_counter()
+    with _trace.span("fleet.bucketing", problems=len(problems),
+                     optimiser="annealing") as bsp:
+        buckets = bucket_indices(problems, tiered=False)
+        bsp.set(buckets=len(buckets))
+    for bi, idxs in enumerate(buckets):
+        bucket_sp = _trace.span("fleet.sa.bucket", bucket=bi,
+                                members=len(idxs))
+        bucket_sp.__enter__()
         members = [problems[i] for i in idxs]
         n_pad, pairs_pad, vals_pad, lut_pad, tabs = _bucket_tables(members)
         sas = [DeviceSA(p, pad_nodes=n_pad, pad_pairs=pairs_pad,
@@ -510,19 +534,23 @@ def fleet_annealing(problems: Sequence, seed: int = 0,
             total_sweeps = max(1, math.ceil(math.log(k_min / k_start)
                                             / math.log(cooling)))
 
-        state_st, temps_st, traces = _fleet_sa_sweeps(
-            static, sas[0].gran, sas[0].has_cut_edges, total_sweeps,
-            _stack([s.A for s in sas]),
-            jnp.stack([s.menus for s in sas]),
-            jnp.stack([s.menu_sizes for s in sas]),
-            jnp.stack([s.clamp for s in sas]),
-            jnp.stack([s.kv_fix for s in sas]),
-            _stack(states), jnp.stack(temps),
-            jnp.asarray(np.asarray(scales, np.float64)),
-            cooling, k_min)
-        t_obj = np.asarray(traces[0], np.float64)    # [P, sweeps, chains]
-        t_feas = np.asarray(traces[1], bool)
-        elapsed = time.perf_counter() - start
+        with _metrics.device_dispatch("fleet_sa_sweeps", bucket=bi,
+                                      sweeps=total_sweeps):
+            state_st, temps_st, traces = _fleet_sa_sweeps(
+                static, sas[0].gran, sas[0].has_cut_edges, total_sweeps,
+                _stack([s.A for s in sas]),
+                jnp.stack([s.menus for s in sas]),
+                jnp.stack([s.menu_sizes for s in sas]),
+                jnp.stack([s.clamp for s in sas]),
+                jnp.stack([s.kv_fix for s in sas]),
+                _stack(states), jnp.stack(temps),
+                jnp.asarray(np.asarray(scales, np.float64)),
+                cooling, k_min)
+        with _trace.span("fleet.d2h.sa_traces"):
+            t_obj = np.asarray(traces[0], np.float64)  # [P, sweeps, chains]
+            t_feas = np.asarray(traces[1], bool)
+        bucket_sp.__exit__(None, None, None)
+        elapsed = bucket_sp.elapsed_s()
 
         for mi, (p, sa, ev0) in enumerate(zip(members, sas, ev0s)):
             history = [(0, ev0.objective)]
@@ -603,7 +631,16 @@ def fleet_rule_based(problems: Sequence,
     from repro.core.optimizers.rule_based import _algorithm2
 
     results: List[Optional[OptimResult]] = [None] * len(problems)
-    for idxs in bucket_indices(problems, tiered=False):
+    with _trace.span("fleet.bucketing", problems=len(problems),
+                     optimiser="rule_based") as bsp:
+        buckets = bucket_indices(problems, tiered=False)
+        bsp.set(buckets=len(buckets))
+    for bi, idxs in enumerate(buckets):
+        # attribution only: rule-based ``seconds`` comes from each
+        # member's ``_algorithm2`` clock, not from the bucket span
+        bucket_sp = _trace.span("fleet.rb.bucket", bucket=bi,
+                                members=len(idxs))
+        bucket_sp.__enter__()
         members = [problems[i] for i in idxs]
         P = len(members)
         n_pad, pairs_pad, vals_pad, lut_pad, tabs = _bucket_tables(members)
@@ -632,6 +669,7 @@ def fleet_rule_based(problems: Sequence,
                 pending.append(None)
 
         E = max(n_pad - 1, 0)
+        rnd = 0
         while any(req is not None for req in pending):
             si = np.ones((P, n_pad), idt_np)
             so = np.ones((P, n_pad), idt_np)
@@ -646,12 +684,16 @@ def fleet_rule_based(problems: Sequence,
                 v, part = req
                 (si[li], so[li], kk[li], cb[li], pm[li], pidx[li],
                  cap[li]) = rbs[li].pack_request(v, part)
-            o_si, o_so, o_kk, pts = (np.asarray(x) for x in
-                                     _fleet_rb_descend(
-                static, rbs[0].gran, A_st, menus_st, sizes_st, clamp_st,
-                jnp.asarray(si), jnp.asarray(so), jnp.asarray(kk),
-                jnp.asarray(cb), jnp.asarray(pm), jnp.asarray(pidx),
-                amort, jnp.asarray(cap)))
+            with _metrics.device_dispatch("fleet_rb_descend", bucket=bi,
+                                          round=rnd):
+                out = _fleet_rb_descend(
+                    static, rbs[0].gran, A_st, menus_st, sizes_st,
+                    clamp_st, jnp.asarray(si), jnp.asarray(so),
+                    jnp.asarray(kk), jnp.asarray(cb), jnp.asarray(pm),
+                    jnp.asarray(pidx), amort, jnp.asarray(cap))
+            with _trace.span("fleet.d2h.rb_descend"):
+                o_si, o_so, o_kk, pts = (np.asarray(x) for x in out)
+            rnd += 1
             for li, req in enumerate(pending):
                 if req is None:
                     continue
@@ -663,4 +705,5 @@ def fleet_rule_based(problems: Sequence,
                 except StopIteration as stop:
                     results[idxs[li]] = stop.value
                     pending[li] = None
+        bucket_sp.__exit__(None, None, None)
     return results

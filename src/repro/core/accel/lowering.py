@@ -51,6 +51,7 @@ from typing import NamedTuple, Optional, Tuple
 import numpy as np
 
 from repro.core.accel import EngineUnavailable, require_jax
+from repro.obs import trace as _trace
 
 #: realisability tables are built by calling ``platform.folds_realizable``
 #: over the fold-value cube; above this menu size the cube is too expensive
@@ -219,6 +220,7 @@ def _mask(index_set, n: int, n_pad: int) -> np.ndarray:
     return m
 
 
+@_trace.traced("accel.build_static_spec")
 def build_static_spec(bev, *, use_pallas: bool = False,
                       pallas_interpret: bool = False,
                       pad_nodes: Optional[int] = None) -> StaticSpec:
@@ -256,6 +258,7 @@ def build_static_spec(bev, *, use_pallas: bool = False,
     )
 
 
+@_trace.traced("accel.lower_program")
 def lower_program(bev, *, use_pallas: bool = False,
                   pallas_interpret: bool | None = None,
                   pad_nodes: Optional[int] = None,

@@ -61,7 +61,6 @@ and re-runs without retracing.
 from __future__ import annotations
 
 import functools
-import time
 from typing import List, Optional, Tuple
 
 import numpy as np
@@ -74,6 +73,8 @@ from repro.core.accel.eval_jax import (
     JaxEvaluator,
     _eval_core,
 )
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
 from repro.core.accel.lowering import DeviceArrays, StaticSpec
 from repro.core.hdgraph import Variables
 from repro.core.optimizers.common import OptimResult
@@ -498,58 +499,69 @@ def brute_force_jax(problem, include_cuts: bool, max_cuts: int,
     best_obj = np.inf
     points = 0
     history: List[Tuple[int, float]] = []
-    start = time.perf_counter()
     stop = False
 
-    for cuts in _cut_sets(graph.cut_edges, include_cuts, max_cuts):
-        if stop:
-            break
-        scopes = _slot_scopes(backend, graph, slots, cuts)
-        tabs_py = _clamp_tables(graph, slots, scopes, menus)
-        sigma, T = _construction_tables(graph, backend, slots, scopes,
-                                        tabs_py, menus, cuts, base,
-                                        max_menu, idt)
-        sigma_d = jnp.asarray(sigma)
-        T_d = jnp.asarray(T)
-        cb_row = np.zeros(max(n - 1, 0), bool)
-        for c in cuts:
-            cb_row[c] = True
-        cb_row_d = jnp.asarray(cb_row)
+    # the span is the engine's wall clock (enabled or not) — the same
+    # perf_counter pair the scalar/numpy engines use, so OptimResult
+    # timing attribution is engine-independent
+    with _trace.span("optim.brute_force.jax", total=total,
+                     batch=B) as run_sp:
+        for cuts in _cut_sets(graph.cut_edges, include_cuts, max_cuts):
+            if stop:
+                break
+            scopes = _slot_scopes(backend, graph, slots, cuts)
+            tabs_py = _clamp_tables(graph, slots, scopes, menus)
+            sigma, T = _construction_tables(graph, backend, slots, scopes,
+                                            tabs_py, menus, cuts, base,
+                                            max_menu, idt)
+            sigma_d = jnp.asarray(sigma)
+            T_d = jnp.asarray(T)
+            cb_row = np.zeros(max(n - 1, 0), bool)
+            for c in cuts:
+                cb_row[c] = True
+            cb_row_d = jnp.asarray(cb_row)
 
-        produced = 0
-        while produced < total:
-            take = min(B, total - produced)
-            if max_points is not None:
-                take = min(take, max_points - points)
-            if take <= 0:
-                stop = True
-                break
-            desc = chunk_descriptor(strides, sizes, produced, take,
-                                    len(slots), idt)
-            objs, bi_si, bi_so, bi_kk = _bf_chunk(
-                static, B, not cuts, A, jnp.asarray(desc),
-                sigma_d, T_d, cb_row_d, take)
-            objs = np.asarray(objs[:take], np.float64)
-            problem.note_batch_evals(take)
-            last_imp, best_obj = absorb_improvements(objs, best_obj,
-                                                     points, history)
-            if last_imp is not None:
-                best_v = Variables(
-                    tuple(int(e) for e in np.nonzero(cb_row)[0]),
-                    tuple(int(x) for x in np.asarray(bi_si)),
-                    tuple(int(x) for x in np.asarray(bi_so)),
-                    tuple(int(x) for x in np.asarray(bi_kk)))
-            points += take
-            produced += take
-            if max_points is not None and points >= max_points:
-                stop = True
-                break
-            if time_budget_s is not None and \
-                    time.perf_counter() - start > time_budget_s:
-                stop = True
-                break
+            produced = 0
+            while produced < total:
+                take = min(B, total - produced)
+                if max_points is not None:
+                    take = min(take, max_points - points)
+                if take <= 0:
+                    stop = True
+                    break
+                desc = chunk_descriptor(strides, sizes, produced, take,
+                                        len(slots), idt)
+                with _metrics.device_dispatch("bf_chunk", take=take):
+                    objs, bi_si, bi_so, bi_kk = _bf_chunk(
+                        static, B, not cuts, A, jnp.asarray(desc),
+                        sigma_d, T_d, cb_row_d, take)
+                # blocking readback: this span, not the async dispatch
+                # above, absorbs the device compute time
+                with _trace.span("accel.d2h.bf_chunk", take=take):
+                    objs = np.asarray(objs[:take], np.float64)
+                if _trace.enabled():
+                    _metrics.histogram("accel.bf.feasible_fraction").observe(
+                        float(np.isfinite(objs).mean()) if take else 0.0)
+                problem.note_batch_evals(take)
+                last_imp, best_obj = absorb_improvements(objs, best_obj,
+                                                         points, history)
+                if last_imp is not None:
+                    best_v = Variables(
+                        tuple(int(e) for e in np.nonzero(cb_row)[0]),
+                        tuple(int(x) for x in np.asarray(bi_si)),
+                        tuple(int(x) for x in np.asarray(bi_so)),
+                        tuple(int(x) for x in np.asarray(bi_kk)))
+                points += take
+                produced += take
+                if max_points is not None and points >= max_points:
+                    stop = True
+                    break
+                if time_budget_s is not None and \
+                        run_sp.elapsed_s() > time_budget_s:
+                    stop = True
+                    break
 
-    elapsed = time.perf_counter() - start
+    elapsed = run_sp.elapsed_s()
     if best_v is None:                         # no feasible point found
         best_v = backend.initial(graph)
     best_eval = problem.evaluate(best_v)
@@ -693,10 +705,11 @@ class DeviceSA:
 
     def run(self, state, temps, scale: float, cooling: float, k_min: float,
             n_sweeps: int):
-        return _sa_sweeps(self.static, self.gran, self.has_cut_edges,
-                          n_sweeps, self.A, self.menus, self.menu_sizes,
-                          self.clamp, self.kv_fix, state, temps, scale,
-                          cooling, k_min)
+        with _metrics.device_dispatch("sa_sweeps", sweeps=n_sweeps):
+            return _sa_sweeps(self.static, self.gran, self.has_cut_edges,
+                              n_sweeps, self.A, self.menus, self.menu_sizes,
+                              self.clamp, self.kv_fix, state, temps, scale,
+                              cooling, k_min)
 
     # ------------------------------------------------------------------
     def best_variables(self, state):
@@ -1078,10 +1091,11 @@ class DeviceRuleBased:
         idt = self.A.batch.dtype
         fdt = self.A.flops.dtype
         si, so, kk, cb_row, part_mask, pidx, cap = self.pack_request(v, part)
-        o_si, o_so, o_kk, pts = _rb_descend(
-            self.static, self.gran, self.A, self.menus, self.menu_sizes,
-            self.clamp, jnp.asarray(si, idt), jnp.asarray(so, idt),
-            jnp.asarray(kk, idt), jnp.asarray(cb_row),
-            jnp.asarray(part_mask), jnp.asarray(pidx, idt),
-            jnp.asarray(self.amort, fdt), jnp.asarray(cap, idt))
+        with _metrics.device_dispatch("rb_descend", part=len(part)):
+            o_si, o_so, o_kk, pts = _rb_descend(
+                self.static, self.gran, self.A, self.menus, self.menu_sizes,
+                self.clamp, jnp.asarray(si, idt), jnp.asarray(so, idt),
+                jnp.asarray(kk, idt), jnp.asarray(cb_row),
+                jnp.asarray(part_mask), jnp.asarray(pidx, idt),
+                jnp.asarray(self.amort, fdt), jnp.asarray(cap, idt))
         return self.unpack(v, o_si, o_so, o_kk, pts)

@@ -42,6 +42,7 @@ from typing import List, Optional
 from repro.core.hdgraph import Variables
 from repro.core.objectives import Problem
 from repro.core.optimizers.common import OptimResult, incumbent_better, repair
+from repro.obs import metrics as _metrics
 
 #: temperature ratio between adjacent parallel-tempering chains
 LADDER_SPREAD = 1.6
@@ -62,15 +63,18 @@ def optimise(problem: Problem,
         from repro.core.accel import resolve_engine
         engine = resolve_engine(engine, allow_fallback=False)
     if engine == "jax":
-        return _optimise_jax(problem, seed, k_start, k_min, cooling,
-                             time_budget_s, max_iters, objective_scale,
-                             max(chains, 1))
-    if chains <= 1:
-        return _optimise_single(problem, seed, k_start, k_min, cooling,
-                                time_budget_s, max_iters, objective_scale)
-    return _optimise_tempering(problem, seed, k_start, k_min, cooling,
+        result = _optimise_jax(problem, seed, k_start, k_min, cooling,
                                time_budget_s, max_iters, objective_scale,
-                               chains, swap_interval)
+                               max(chains, 1))
+    elif chains <= 1:
+        result = _optimise_single(problem, seed, k_start, k_min, cooling,
+                                  time_budget_s, max_iters, objective_scale)
+    else:
+        result = _optimise_tempering(problem, seed, k_start, k_min, cooling,
+                                     time_budget_s, max_iters,
+                                     objective_scale, chains, swap_interval)
+    _metrics.note_result(result, engine=engine)
+    return result
 
 
 def _scale_for(ev, objective_scale: Optional[float]) -> float:

@@ -33,6 +33,7 @@ import numpy as np
 from repro.core.hdgraph import HDGraph, Variables
 from repro.core.objectives import Problem
 from repro.core.optimizers.common import OptimResult
+from repro.obs import metrics as _metrics
 
 _DIM_ATTR = {"s_in": "rows", "s_out": "col_div", "kern": "batch"}
 
@@ -47,14 +48,17 @@ def optimise(problem: Problem,
     from repro.core.accel import resolve_engine
     engine = resolve_engine(engine, allow_fallback=False)
     if engine == "scalar":
-        return _optimise_scalar(problem, include_cuts, max_cuts, max_points,
-                                time_budget_s)
-    if engine == "jax":
+        result = _optimise_scalar(problem, include_cuts, max_cuts,
+                                  max_points, time_budget_s)
+    elif engine == "jax":
         from repro.core.accel.search_loops import brute_force_jax
-        return brute_force_jax(problem, include_cuts, max_cuts, max_points,
-                               time_budget_s, batch_size)
-    return _optimise_batched(problem, include_cuts, max_cuts, max_points,
-                             time_budget_s, batch_size)
+        result = brute_force_jax(problem, include_cuts, max_cuts, max_points,
+                                 time_budget_s, batch_size)
+    else:
+        result = _optimise_batched(problem, include_cuts, max_cuts,
+                                   max_points, time_budget_s, batch_size)
+    _metrics.note_result(result, engine=engine)
+    return result
 
 
 def _cut_sets(cut_edges, include_cuts: bool, max_cuts: int):

@@ -19,6 +19,7 @@ from repro.core.hdgraph import Variables, partitions_from_cuts
 from repro.core.objectives import Problem
 from repro.core.optimizers.common import OptimResult, repair
 from repro.core.perfmodel import partition_time, t_conf
+from repro.obs import metrics as _metrics
 
 VARS = ("s_in", "s_out", "kern")
 
@@ -408,4 +409,6 @@ def optimise(problem: Problem,
             return optimise_partition(problem, v, part,
                                       batch_probes=batch_probes)
 
-    return drive(_algorithm2(problem, time_budget_s, multi_start), descend)
+    result = drive(_algorithm2(problem, time_budget_s, multi_start), descend)
+    _metrics.note_result(result, engine=eng)
+    return result

@@ -59,6 +59,8 @@ from repro.core.objectives import Problem
 from repro.core.optimizers import OPTIMIZERS
 from repro.core.perfmodel import ModelOptions
 from repro.core.platform import Platform, V5E_POD
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
 
 
 def make_problem(arch: ArchConfig, shape: ShapeSpec,
@@ -96,13 +98,19 @@ def optimise_mapping(arch: ArchConfig, shape: ShapeSpec,
     """``engine`` selects the evaluation engine (see the module docstring
     matrix); None keeps each optimiser's default. Remaining kwargs go to
     the optimiser entry point."""
-    problem = make_problem(arch, shape, platform, backend, objective,
-                           exec_model, opts)
-    if engine is not None:
-        optimiser_kwargs["engine"] = engine
-    result = OPTIMIZERS[optimiser](problem, **optimiser_kwargs)
-    return export_plan(problem.graph, result.variables, platform,
-                       exec_model, result.evaluation)
+    with _trace.span("pipeline.optimise_mapping", arch=arch.name,
+                     optimiser=optimiser, backend=backend,
+                     objective=objective, engine=engine or "default"):
+        with _trace.span("pipeline.make_problem"):
+            problem = make_problem(arch, shape, platform, backend,
+                                   objective, exec_model, opts)
+        if engine is not None:
+            optimiser_kwargs["engine"] = engine
+        with _trace.span("pipeline.optimise", optimiser=optimiser):
+            result = OPTIMIZERS[optimiser](problem, **optimiser_kwargs)
+        with _trace.span("pipeline.export_plan"):
+            return export_plan(problem.graph, result.variables, platform,
+                               exec_model, result.evaluation)
 
 
 def optimise_portfolio(archs: Sequence, shapes,
@@ -183,8 +191,10 @@ def optimise_portfolio(archs: Sequence, shapes,
         raise ValueError(f"got {len(archs)} archs but {len(objectives)} "
                          f"objectives; pass one objective or exactly one "
                          f"per arch")
-    problems = [make_problem(a, s, p, backend, o, exec_model, opts)
-                for a, s, p, o in zip(archs, shapes, platforms, objectives)]
+    with _trace.span("pipeline.make_problems", count=len(archs)):
+        problems = [make_problem(a, s, p, backend, o, exec_model, opts)
+                    for a, s, p, o in
+                    zip(archs, shapes, platforms, objectives)]
     eng = resolve_engine(engine, allow_fallback=False)
     fleet_kw = {
         "brute_force": {"include_cuts", "max_cuts", "max_points",
@@ -208,13 +218,24 @@ def optimise_portfolio(archs: Sequence, shapes,
         runner = {"brute_force": fleet_brute_force,
                   "annealing": fleet_annealing,
                   "rule_based": fleet_rule_based}[optimiser]
-        results = runner(problems, **optimiser_kwargs)
+        with _trace.span("pipeline.optimise_portfolio.fleet",
+                         optimiser=optimiser, problems=len(problems)):
+            results = runner(problems, **optimiser_kwargs)
+        # the fleet runners bypass the optimiser entry points (which note
+        # their own results), so account for their results here
+        for r in results:
+            _metrics.note_result(r, engine="fleet")
     else:
-        results = [OPTIMIZERS[optimiser](p, engine=eng, **optimiser_kwargs)
-                   for p in problems]
-    return [export_plan(p.graph, r.variables, p.platform, exec_model,
-                        r.evaluation)
-            for p, r in zip(problems, results)]
+        with _trace.span("pipeline.optimise_portfolio.loop",
+                         optimiser=optimiser, engine=eng,
+                         problems=len(problems)):
+            results = [OPTIMIZERS[optimiser](p, engine=eng,
+                                             **optimiser_kwargs)
+                       for p in problems]
+    with _trace.span("pipeline.export_plans", count=len(results)):
+        return [export_plan(p.graph, r.variables, p.platform, exec_model,
+                            r.evaluation)
+                for p, r in zip(problems, results)]
 
 
 def baseline_plan(arch: ArchConfig, shape: ShapeSpec,

@@ -1,0 +1,33 @@
+"""Engine telemetry: spans, counters and machine-readable run records.
+
+The optimiser stack's value claim is the throughput of the *search*
+itself — points/s, time-to-optimised-design, executable-cache
+amortisation — so the stack carries its own observability layer:
+
+  trace.py      nested span tracer (context-manager + decorator API,
+                monotonic clocks, thread-safe). Opt-in: spans always
+                *time* (so callers can use a span as their wall clock
+                even when telemetry is off) but are only *recorded*
+                when tracing is enabled, keeping the disabled path at
+                two ``perf_counter`` calls per span.
+  metrics.py    typed counter/gauge/histogram/series registry. Always
+                on (a counter increment is a dict lookup + int add —
+                the same cost class as the old bare ``TRACE_COUNTS``
+                dict, which now lives here as a backwards-compatible
+                view over registry counters).
+  runrecord.py  serialise a completed run — spans + metrics + config +
+                git SHA + platform fingerprint — to JSONL, with a
+                loader and a differ (``tools/bench_report.py`` turns
+                records into ``BENCH_<lane>.json`` rows).
+
+Everything in this package is stdlib-only and jax-free — it sits in the
+``REPRO_NO_JAX`` import matrix (enforced by ``analysis/ast_rules.py``)
+because the instrumented host code (``core/accel``, ``pipeline``) must
+import it whether or not jax is present. See ``docs/observability.md``
+for the span taxonomy, the metric catalogue and the run-record schema.
+"""
+from __future__ import annotations
+
+from repro.obs import metrics, runrecord, trace
+
+__all__ = ["trace", "metrics", "runrecord"]

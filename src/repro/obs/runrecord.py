@@ -1,0 +1,237 @@
+"""Machine-readable run records: spans + metrics + config + provenance.
+
+A *run record* is one JSON object describing one completed benchmark
+lane (or any other instrumented run): every span the tracer collected,
+a full metrics snapshot, the caller's config dict, the git SHA of the
+working tree and a platform fingerprint. Records append to JSONL files
+(one object per line, newest last) so repeated runs of the same lane
+accumulate into a diffable perf trajectory instead of silently
+overwriting each other.
+
+``tools/bench_report.py`` is the consumer: it validates records, emits
+``BENCH_<lane>.json`` rows and diffs two records into a regression
+report. ``benchmarks/run.py`` is the producer: each lane runs with
+tracing enabled and calls :func:`capture` on completion.
+
+stdlib-only and jax-free; the jax backend only appears in the platform
+fingerprint, and only when the engine registry says jax is usable.
+"""
+from __future__ import annotations
+
+import json
+import os
+import platform as _platform
+import subprocess
+import sys
+import time
+from typing import Any, Dict, List, Optional
+
+from repro.obs import metrics, trace
+
+SCHEMA_VERSION = 1
+
+#: top-level keys every valid record carries.
+RECORD_FIELDS = (
+    "schema", "lane", "created_unix", "created_iso", "git_sha",
+    "platform", "config", "spans", "spans_dropped", "metrics",
+)
+
+
+def git_sha(cwd: Optional[str] = None) -> str:
+    """HEAD SHA of the enclosing checkout, or ``"unknown"``.
+
+    Never raises: records must still be writable from an exported
+    tarball or a CI cache with no ``.git``.
+    """
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=cwd, capture_output=True,
+            text=True, timeout=10, check=False)
+        sha = out.stdout.strip()
+        if out.returncode == 0 and sha:
+            return sha
+    except (OSError, subprocess.SubprocessError):
+        pass
+    return "unknown"
+
+
+def platform_fingerprint() -> Dict[str, Any]:
+    """Enough environment to interpret timings: python, OS, CPU count,
+    numpy version, and — when the engine registry says jax is usable —
+    the jax version and default backend."""
+    fp: Dict[str, Any] = {
+        "python": sys.version.split()[0],
+        "implementation": _platform.python_implementation(),
+        "platform": _platform.platform(),
+        "machine": _platform.machine(),
+        "cpu_count": os.cpu_count(),
+    }
+    try:
+        import numpy
+        fp["numpy"] = numpy.__version__
+    except ImportError:
+        pass
+    from repro.core.accel import jax_available
+    if jax_available():
+        try:
+            import jax
+            fp["jax"] = jax.__version__
+            fp["jax_backend"] = jax.default_backend()
+        except Exception:                       # broken install: omit
+            pass
+    return fp
+
+
+def capture(lane: str, *, config: Optional[Dict[str, Any]] = None,
+            repo_root: Optional[str] = None) -> Dict[str, Any]:
+    """Snapshot the tracer + registry into one schema-valid record."""
+    return {
+        "schema": SCHEMA_VERSION,
+        "lane": str(lane),
+        "created_unix": time.time(),
+        "created_iso": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+        "git_sha": git_sha(repo_root),
+        "platform": platform_fingerprint(),
+        "config": dict(config or {}),
+        "spans": trace.snapshot(),
+        "spans_dropped": trace.dropped(),
+        "metrics": metrics.snapshot(),
+    }
+
+
+def validate(record: Any) -> List[str]:
+    """Schema problems with ``record`` (empty list == valid)."""
+    problems: List[str] = []
+    if not isinstance(record, dict):
+        return [f"record is {type(record).__name__}, expected dict"]
+    for key in RECORD_FIELDS:
+        if key not in record:
+            problems.append(f"missing key {key!r}")
+    if problems:
+        return problems
+    if record["schema"] != SCHEMA_VERSION:
+        problems.append(f"schema {record['schema']!r} != {SCHEMA_VERSION}")
+    if not isinstance(record["lane"], str) or not record["lane"]:
+        problems.append("lane must be a non-empty string")
+    if not isinstance(record["spans"], list):
+        problems.append("spans must be a list")
+    else:
+        for i, sp in enumerate(record["spans"]):
+            missing = [f for f in trace.SPAN_FIELDS
+                       if not isinstance(sp, dict) or f not in sp]
+            if missing:
+                problems.append(f"span[{i}] missing {missing}")
+                break
+    m = record["metrics"]
+    if not isinstance(m, dict):
+        problems.append("metrics must be a dict")
+    else:
+        for section in ("counters", "gauges", "histograms", "series"):
+            if not isinstance(m.get(section), dict):
+                problems.append(f"metrics.{section} must be a dict")
+    if not isinstance(record["config"], dict):
+        problems.append("config must be a dict")
+    if not isinstance(record["platform"], dict):
+        problems.append("platform must be a dict")
+    return problems
+
+
+def append(record: Dict[str, Any], path: str) -> str:
+    """Append one record to a JSONL file (created with parents)."""
+    problems = validate(record)
+    if problems:
+        raise ValueError(f"refusing to write invalid run record: {problems}")
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "a", encoding="utf-8") as f:
+        f.write(json.dumps(record, sort_keys=True) + "\n")
+    return path
+
+
+def load(path: str) -> List[Dict[str, Any]]:
+    """All records in a JSONL file, oldest first. Raises on malformed
+    lines — a corrupt trajectory should fail loudly, not half-load."""
+    records: List[Dict[str, Any]] = []
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError as err:
+                raise ValueError(f"{path}:{lineno}: not JSON: {err}") from err
+            problems = validate(rec)
+            if problems:
+                raise ValueError(f"{path}:{lineno}: invalid record: "
+                                 f"{problems}")
+            records.append(rec)
+    return records
+
+
+def latest(path: str, lane: Optional[str] = None) -> Optional[Dict[str, Any]]:
+    """Newest record in ``path`` (optionally filtered by lane), or None."""
+    if not os.path.exists(path):
+        return None
+    recs = [r for r in load(path) if lane is None or r["lane"] == lane]
+    return recs[-1] if recs else None
+
+
+def span_totals(record: Dict[str, Any]) -> Dict[str, Dict[str, float]]:
+    """Aggregate spans by name: {name: {count, total_s, max_s}}."""
+    out: Dict[str, Dict[str, float]] = {}
+    for sp in record["spans"]:
+        agg = out.setdefault(sp["name"],
+                             {"count": 0, "total_s": 0.0, "max_s": 0.0})
+        agg["count"] += 1
+        agg["total_s"] += sp["dur_s"]
+        if sp["dur_s"] > agg["max_s"]:
+            agg["max_s"] = sp["dur_s"]
+    return out
+
+
+def diff(old: Dict[str, Any], new: Dict[str, Any]) -> Dict[str, Any]:
+    """Compare two records: counter deltas, gauge ratios, span-name
+    wall-time ratios. Keys present in only one record still appear
+    (with the other side null) so regressions can't hide behind a
+    renamed metric."""
+    oc = old["metrics"]["counters"]
+    nc = new["metrics"]["counters"]
+    og = old["metrics"]["gauges"]
+    ng = new["metrics"]["gauges"]
+    ot = span_totals(old)
+    nt = span_totals(new)
+
+    def both(a: Dict[str, Any], b: Dict[str, Any]):
+        return sorted(set(a) | set(b))
+
+    counters = {k: {"old": oc.get(k), "new": nc.get(k),
+                    "delta": (nc.get(k, 0) or 0) - (oc.get(k, 0) or 0)}
+                for k in both(oc, nc)}
+    gauges = {}
+    for k in both(og, ng):
+        o, n = og.get(k), ng.get(k)
+        gauges[k] = {"old": o, "new": n,
+                     "ratio": (n / o) if (o and n and o != 0) else None}
+    spans = {}
+    for k in both(ot, nt):
+        o = ot.get(k, {}).get("total_s")
+        n = nt.get(k, {}).get("total_s")
+        spans[k] = {"old_s": o, "new_s": n,
+                    "ratio": (n / o) if (o and n and o != 0) else None}
+    return {
+        "lanes": [old["lane"], new["lane"]],
+        "git_sha": [old["git_sha"], new["git_sha"]],
+        "created_iso": [old["created_iso"], new["created_iso"]],
+        "counters": counters,
+        "gauges": gauges,
+        "span_totals_s": spans,
+    }
+
+
+__all__ = [
+    "SCHEMA_VERSION", "RECORD_FIELDS", "git_sha", "platform_fingerprint",
+    "capture", "validate", "append", "load", "latest", "span_totals",
+    "diff",
+]

@@ -35,6 +35,22 @@ TINY_SHAPE = ShapeSpec("train_tiny", 256, 16, "train")
 TINY_DECODE = ShapeSpec("decode_tiny", 256, 16, "decode")
 
 
+@pytest.fixture(autouse=True)
+def _reset_obs_state():
+    """Isolate the telemetry layer between tests: tracing off, span
+    buffer empty, metrics registry empty. ``TRACE_COUNTS`` keys
+    re-materialise at zero (the view is get-or-create), so delta-based
+    consumers like ``assert_max_traces`` are unaffected."""
+    from repro.obs import metrics, trace
+    trace.disable()
+    trace.reset()
+    metrics.reset()
+    yield
+    trace.disable()
+    trace.reset()
+    metrics.reset()
+
+
 @pytest.fixture
 def assert_max_traces():
     """Context manager asserting the jitted accel entry points trace at

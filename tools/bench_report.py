@@ -1,0 +1,165 @@
+"""Turn run records into BENCH rows; validate and diff them.
+
+The benchmark lanes (``benchmarks/run.py``) append one run record per
+run to ``experiments/benchmarks/runrecords.jsonl`` (schema in
+``repro/obs/runrecord.py``, prose in ``docs/observability.md``). This
+tool is the reader side:
+
+  validate  check every record in a JSONL file against the schema
+            (CI's obs smoke step: a lane ran, a parseable record exists)
+  emit      distil the newest record for a lane into a flat
+            ``BENCH_<lane>.json`` row — points/s per optimiser/engine,
+            dispatch + executable-cache-hit counts, wall time by span
+            name — the thing the perf trajectory in docs/benchmarks.md
+            quotes
+  diff      compare the two newest records (or two files) and print
+            counter deltas / gauge ratios / span-time ratios, so a
+            perf regression is one command to localise
+
+Usage::
+
+    python tools/bench_report.py validate experiments/benchmarks/runrecords.jsonl
+    python tools/bench_report.py emit experiments/benchmarks/runrecords.jsonl \
+        --lane accel --out experiments/benchmarks
+    python tools/bench_report.py diff old.jsonl new.jsonl --lane accel
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Any, Dict, Optional
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (os.path.join(REPO_ROOT, "src"), REPO_ROOT):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from repro.obs import runrecord  # noqa: E402
+
+
+def bench_row(record: Dict[str, Any]) -> Dict[str, Any]:
+    """Flatten one run record into a BENCH row.
+
+    Keeps exactly what the perf trajectory needs: identity (lane, SHA,
+    timestamp, platform), throughput (points/s gauges + evaluation
+    counters), executable-cache behaviour (dispatches / hits / traces)
+    and wall time aggregated by span name (which includes the lowering,
+    StaticSpec-build and per-kind dispatch spans).
+    """
+    c = record["metrics"]["counters"]
+    g = record["metrics"]["gauges"]
+
+    def section(prefix: str) -> Dict[str, Any]:
+        return {k[len(prefix):]: v for k, v in c.items()
+                if k.startswith(prefix)}
+
+    return {
+        "schema": runrecord.SCHEMA_VERSION,
+        "lane": record["lane"],
+        "git_sha": record["git_sha"],
+        "created_iso": record["created_iso"],
+        "platform": {k: record["platform"].get(k)
+                     for k in ("python", "numpy", "jax", "jax_backend",
+                               "cpu_count", "machine")},
+        "points_per_s": {k[len("optim."):-len(".points_per_s")]: v
+                         for k, v in g.items()
+                         if k.startswith("optim.")
+                         and k.endswith(".points_per_s")},
+        "points": section("optim."),
+        "dispatches": section("accel.dispatches."),
+        "cache_hits": section("accel.cache_hits."),
+        "traces": section("accel.traces."),
+        "span_totals_s": runrecord.span_totals(record),
+        "spans_dropped": record["spans_dropped"],
+        "config": record["config"],
+    }
+
+
+def write_bench(record: Dict[str, Any], out_dir: str) -> str:
+    """Write ``BENCH_<lane>.json`` for ``record``; returns the path."""
+    row = bench_row(record)
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{record['lane']}.json")
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(row, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def _latest(path: str, lane: Optional[str]) -> Dict[str, Any]:
+    rec = runrecord.latest(path, lane)
+    if rec is None:
+        where = f"lane {lane!r} in {path}" if lane else path
+        raise SystemExit(f"bench_report: no run record for {where}")
+    return rec
+
+
+def cmd_validate(args: argparse.Namespace) -> int:
+    records = runrecord.load(args.records)   # raises on any invalid line
+    if args.lane:
+        records = [r for r in records if r["lane"] == args.lane]
+        if not records:
+            print(f"bench_report: no records for lane {args.lane!r} "
+                  f"in {args.records}")
+            return 1
+    lanes = sorted({r["lane"] for r in records})
+    print(f"bench_report: {len(records)} valid record(s) in "
+          f"{args.records} (lanes: {', '.join(lanes)})")
+    return 0
+
+
+def cmd_emit(args: argparse.Namespace) -> int:
+    rec = _latest(args.records, args.lane)
+    path = write_bench(rec, args.out)
+    print(f"bench_report: wrote {path} "
+          f"(sha {rec['git_sha'][:12]}, {rec['created_iso']})")
+    return 0
+
+
+def cmd_diff(args: argparse.Namespace) -> int:
+    old = _latest(args.old, args.lane)
+    new = _latest(args.new, args.lane)
+    d = runrecord.diff(old, new)
+    if args.out:
+        with open(args.out, "w", encoding="utf-8") as f:
+            json.dump(d, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"bench_report: wrote {args.out}")
+    else:
+        json.dump(d, sys.stdout, indent=2, sort_keys=True)
+        print()
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    v = sub.add_parser("validate", help="schema-check a JSONL record file")
+    v.add_argument("records")
+    v.add_argument("--lane", default=None)
+    v.set_defaults(fn=cmd_validate)
+
+    e = sub.add_parser("emit", help="write BENCH_<lane>.json from the "
+                                    "newest record")
+    e.add_argument("records")
+    e.add_argument("--lane", default=None)
+    e.add_argument("--out", default=os.path.join("experiments",
+                                                 "benchmarks"))
+    e.set_defaults(fn=cmd_emit)
+
+    d = sub.add_parser("diff", help="diff the newest records of two files")
+    d.add_argument("old")
+    d.add_argument("new")
+    d.add_argument("--lane", default=None)
+    d.add_argument("--out", default=None)
+    d.set_defaults(fn=cmd_diff)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
