@@ -4,12 +4,16 @@ timings and engine lanes for the accelerated search.
 
     python -m benchmarks.run [names...] [--smoke] [--hetero]
 
-``--smoke`` shrinks the smoke-capable lanes (``accel``, ``fleet``) to
-their smallest spaces for CI: the accel smoke lane runs the smallest
-Table-IV space, asserts the jax==numpy optimum agreement, and fails if it
-exceeds 60 s. ``--hetero`` switches the ``fleet`` lane to the
+``--smoke`` shrinks the smoke-capable lanes (``accel``, ``fleet``,
+``shard``) to their smallest spaces for CI: the accel smoke lane runs the
+smallest Table-IV space, asserts the jax==numpy optimum agreement, and
+fails if it exceeds 60 s. ``--hetero`` switches the ``fleet`` lane to the
 heterogeneous-platform grid (networks x platforms as ONE fleet program;
-see benchmarks/fleet_sweep.py and docs/benchmarks.md).
+see benchmarks/fleet_sweep.py and docs/benchmarks.md). The ``shard`` lane
+(benchmarks/shard_sweep.py) times the sharded engines across a device
+grid — run it under ``REPRO_FAKE_DEVICES=8`` for the full curve
+(``runtime_config.apply_env()`` below consumes the variable before any
+jax backend init).
 
 Every lane runs with telemetry enabled (``repro/obs``): on completion a
 run record — spans, metrics, config, git SHA, platform fingerprint — is
@@ -23,13 +27,20 @@ import subprocess
 import sys
 import time
 
-from repro.obs import metrics, runrecord, trace
+from repro import runtime_config
 
-from benchmarks import (
+# Runtime knobs (REPRO_FAKE_DEVICES et al.) must land before anything can
+# initialise a jax backend — the shard lane's device grid depends on it.
+runtime_config.apply_env()
+
+from repro.obs import metrics, runrecord, trace  # noqa: E402
+
+from benchmarks import (  # noqa: E402
     fig2_optimizer_compare,
     fig4_batch_partitions,
     fleet_sweep,
     roofline,
+    shard_sweep,
     table4_design_space,
     table5_objectives,
     table6_vs_baseline,
@@ -54,14 +65,15 @@ ALL = {
     "roofline": roofline.run,
     "accel": table4_design_space.run_accel,
     "fleet": fleet_sweep.run,
+    "shard": shard_sweep.run,
     "tests": run_tests,
 }
 
 #: lanes that run only when asked for explicitly
-_ON_DEMAND = ("tests", "accel", "fleet")
+_ON_DEMAND = ("tests", "accel", "fleet", "shard")
 
 #: lanes accepting the ``--smoke`` flag
-_SMOKEABLE = ("accel", "fleet")
+_SMOKEABLE = ("accel", "fleet", "shard")
 
 
 def _bench_report():

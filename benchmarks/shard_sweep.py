@@ -1,0 +1,146 @@
+"""Shard lane: points/s of the sharded engines vs device count.
+
+The sharded engines (``shard_map`` over the ``runtime_config.device_mesh``;
+docs/distributed.md) split two independent hot axes over the mesh: the
+brute-force *chunk axis* (disjoint mixed-radix index ranges per device,
+argmin-combined with ``pmin``/``psum``) and the fleet *problem axis*
+(portfolio lanes data-parallel per device). This lane times both at every
+device count the backend can serve and reports pts/s per D — the
+scaling-curve companion to ``fleet_sweep.py``'s loop-vs-fleet comparison.
+
+Before timing anything the lane asserts the sharded results are
+bit-identical to the single-device jax engines at EVERY device count (the
+distributed contract; the randomized differential suite pins the same
+grid property test-side).
+
+On a real 1-core CI runner the devices come from the fake-device knob:
+the CI ``shard`` job exports ``REPRO_FAKE_DEVICES=8`` and
+``benchmarks/run.py`` routes it through ``runtime_config.apply_env()``
+before any jax backend init. Fake CPU devices share the physical cores,
+so pts/s is roughly FLAT across D on this box — the lane's value is the
+bit-identity gate plus per-dispatch overhead visibility; the scaling
+headroom it exercises is the real multi-chip path. With a single visible
+device only the D=1 column runs (still through ``shard_map`` on a mesh of
+one). Results go to ``experiments/benchmarks/shard_sweep.csv``.
+
+``python -m benchmarks.run shard [--smoke]``
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.accel import jax_available
+from repro.core.optimizers import brute_force
+
+from benchmarks.common import Reporter, make_problem, zoo_arch
+from benchmarks.table4_design_space import _device
+
+NETWORKS = ("3-layer", "TFC", "LeNet")
+DEVICE_GRID = (1, 2, 4, 8)
+MAX_POINTS = 500_000
+BATCH = 16384
+SA_SWEEPS = 300
+SA_CHAINS = 16
+
+
+def _grid():
+    import jax
+    return [d for d in DEVICE_GRID if d <= len(jax.devices())]
+
+
+def _problems(nets):
+    return [make_problem(zoo_arch(n), backend="spmd") for n in nets]
+
+
+def _identical(a, b) -> bool:
+    return (a.points == b.points and a.variables == b.variables
+            and a.history == b.history)
+
+
+def run(reporter=None, smoke: bool = False) -> Reporter:
+    rep = reporter or Reporter("shard_sweep")
+    if not jax_available():
+        print("shard lane: jax not installed — the sharded engines need "
+              "the jax extra")
+        return rep
+    import jax
+
+    from repro.core.accel.fleet import fleet_annealing, fleet_brute_force
+
+    nets = NETWORKS[:2] if smoke else NETWORKS
+    max_points = 30_000 if smoke else MAX_POINTS
+    sweeps = 50 if smoke else SA_SWEEPS
+    chains = 8 if smoke else SA_CHAINS
+    grid = _grid()
+    print(f"shard lane device: {_device()}  visible devices: "
+          f"{len(jax.devices())}  grid: D in {grid}  "
+          f"portfolio: {', '.join(nets)}")
+    if len(grid) == 1:
+        print("shard lane: single visible device — only the D=1 column "
+              "runs; export REPRO_FAKE_DEVICES=8 for the full grid")
+
+    # ---- sharded brute force: chunk axis over the mesh ----------------
+    bf_kw = dict(include_cuts=False, max_points=max_points,
+                 batch_size=BATCH)
+    ref = [brute_force(p, engine="jax", **bf_kw) for p in _problems(nets)]
+    pts = sum(r.points for r in ref)
+    base_rate = None
+    for D in grid:
+        t0 = time.perf_counter()
+        got = [brute_force(p, engine="jax", devices=D, **bf_kw)
+               for p in _problems(nets)]
+        dt = time.perf_counter() - t0
+        for net, a, b in zip(nets, ref, got):
+            if not _identical(a, b):
+                raise SystemExit(f"shard lane FAILED: {net} brute force "
+                                 f"diverges at devices={D}")
+        rate = pts / dt
+        base_rate = base_rate or rate
+        rep.add(mode="brute_force", devices=D, points=pts,
+                pts_per_s=f"{rate:.0f}",
+                vs_d1=f"{rate / max(base_rate, 1e-9):.2f}x")
+
+    # ---- sharded fleets: problem axis over the mesh -------------------
+    sa_kw = dict(seed=0, max_iters=sweeps * chains, chains=chains)
+    ref_fbf = fleet_brute_force(_problems(nets), **bf_kw)
+    ref_fsa = fleet_annealing(_problems(nets), **sa_kw)
+    fbf_pts = sum(r.points for r in ref_fbf)
+    fsa_pts = sum(r.points for r in ref_fsa)
+    base_bf = base_sa = None
+    for D in grid:
+        t0 = time.perf_counter()
+        got_bf = fleet_brute_force(_problems(nets), devices=D, **bf_kw)
+        t_bf = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        got_sa = fleet_annealing(_problems(nets), devices=D, **sa_kw)
+        t_sa = time.perf_counter() - t0
+        for net, a, b in zip(nets, ref_fbf, got_bf):
+            if not _identical(a, b):
+                raise SystemExit(f"shard lane FAILED: {net} fleet brute "
+                                 f"force diverges at devices={D}")
+        for net, a, b in zip(nets, ref_fsa, got_sa):
+            if a.variables != b.variables or a.history != b.history:
+                raise SystemExit(f"shard lane FAILED: {net} fleet SA "
+                                 f"diverges at devices={D}")
+        r_bf, r_sa = fbf_pts / t_bf, fsa_pts / t_sa
+        base_bf, base_sa = base_bf or r_bf, base_sa or r_sa
+        rep.add(mode="fleet_brute_force", devices=D, points=fbf_pts,
+                pts_per_s=f"{r_bf:.0f}",
+                vs_d1=f"{r_bf / max(base_bf, 1e-9):.2f}x")
+        rep.add(mode="fleet_annealing", devices=D, points=fsa_pts,
+                pts_per_s=f"{r_sa:.0f}",
+                vs_d1=f"{r_sa / max(base_sa, 1e-9):.2f}x")
+
+    rep.print_table("Shard sweep — sharded engines, pts/s vs device count")
+    print(f"shard identity: every devices cell bit-identical to the "
+          f"single-device jax engines ({len(nets)} problems x "
+          f"{len(grid)} device counts, brute force + fleet BF + fleet SA)")
+    if not smoke:
+        rep.save()
+    return rep
+
+
+if __name__ == "__main__":
+    from repro import runtime_config
+    runtime_config.apply_env()
+    run()

@@ -58,6 +58,21 @@ if python -c "from repro.core.accel import jax_available as j; raise SystemExit(
     test -s "$OBS_OUT/BENCH_accel.json"
     rm -rf "$OBS_OUT"
     echo "ci.sh: obs smoke OK (run record + BENCH row valid)"
+
+    # The shard smoke step: the sharded-engine lane on 8 fake CPU devices
+    # (REPRO_FAKE_DEVICES routes through runtime_config.apply_env() before
+    # any jax backend init in benchmarks/run.py — a subprocess, so this
+    # process's already-locked device count doesn't matter). The lane
+    # asserts devices∈{1,2,4,8} bit-identity before timing and must emit a
+    # schema-valid run record (docs/distributed.md).
+    SHARD_OUT="$(mktemp -d)"
+    BENCH_OUT="$SHARD_OUT" REPRO_FAKE_DEVICES=8 \
+        python -m benchmarks.run shard --smoke
+    python tools/bench_report.py validate "$SHARD_OUT/runrecords.jsonl" --lane shard
+    test -s "$SHARD_OUT/BENCH_shard.json"
+    rm -rf "$SHARD_OUT"
+    echo "ci.sh: shard smoke OK (8-device grid bit-identical + BENCH row valid)"
 else
     echo "ci.sh: obs smoke skipped (jax unavailable; record layer covered by tests/test_obs.py)"
+    echo "ci.sh: shard smoke skipped (jax unavailable)"
 fi

@@ -61,6 +61,9 @@ NO_JAX_PREFIXES: Tuple[str, ...] = (
     "repro/data/",
     "repro/analysis/",
     "repro/obs/",
+    # must stay importable (and callable, bar device_mesh) without jax:
+    # it is the thing that configures the process BEFORE jax loads
+    "repro/runtime_config.py",
 )
 
 #: the jax-subject accel modules — the only core files allowed to import
@@ -87,6 +90,10 @@ TRACED_HELPERS: Dict[str, Set[str]] = {
     "_bf_decode_digits": {"B", "idt"},
     "_bf_eval_part": {"static", "B", "no_cut"},
     "_bf_chunk_core": {"static", "B", "no_cut"},
+    "_bf_shard_chunk": {"static", "B", "no_cut", "D"},
+    "_fleet_bf_chunk_core": {"static", "B", "no_cut"},
+    "_fleet_sa_sweeps_core": {"static", "gran", "has_cut_edges", "n_sweeps"},
+    "_fleet_rb_descend_core": {"static", "gran"},
     "_sa_sweep_step": {"static", "gran", "has_cut_edges"},
     "_sa_scan": {"static", "gran", "has_cut_edges", "n_sweeps"},
     "_rb_step": {"static", "gran"},

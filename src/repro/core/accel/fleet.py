@@ -90,6 +90,27 @@ def _stack(trees):
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
 
 
+def _fleet_mesh(devices: Optional[int]):
+    """Resolve the ``devices`` kwarg shared by the fleet entry points:
+    ``None`` keeps the single-program jits; an int D builds the 1-D
+    ``dev`` mesh (``runtime_config.device_mesh``) the ``_*_shard`` twins
+    map over. Returns ``(mesh_or_None, D)``."""
+    if devices is None:
+        return None, 1
+    from repro import runtime_config
+    mesh = runtime_config.device_mesh(devices)
+    return mesh, int(mesh.devices.size)
+
+
+def _pad_lanes(P: int, D: int) -> int:
+    """Bucket lane count padded up so the ``dev`` axis divides it: ragged
+    device counts ride on no-op lanes (``take=0`` for brute force,
+    ``cap=0`` for rule-based, a duplicated lane otherwise — all discarded
+    on the host side), the same inert-lane contract the fleets already
+    use for members that run out of work."""
+    return -(-P // D) * D
+
+
 #: node counts round up to the next multiple of this before bucketing, so
 #: nearly-equal graphs share one executable while a 35-node outlier never
 #: forces 2-3x padding waste onto an 11-node majority
@@ -179,9 +200,8 @@ def bucket_indices(problems, tiered: bool = True) -> List[List[int]]:
 # vmapped entry points (jitted once per bucket)
 # ----------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnums=(0, 1, 2))
-def _fleet_bf_chunk(static: StaticSpec, B: int, no_cut: bool,
-                    A, desc, sigma, T, cb_row, take):
+def _fleet_bf_chunk_core(static: StaticSpec, B: int, no_cut: bool,
+                         A, desc, sigma, T, cb_row, take):
     """One enumeration chunk for EVERY problem in a bucket.
 
     The digit decode runs with the problem axis flattened into the gather
@@ -191,12 +211,16 @@ def _fleet_bf_chunk(static: StaticSpec, B: int, no_cut: bool,
     identical to ``_bf_chunk_core``. The evaluation half is the verbatim
     ``_bf_eval_part`` under ``jax.vmap``, which keeps per-problem float
     results bit-identical to the per-problem engine.
+
+    Shared verbatim by the single-program jit (``_fleet_bf_chunk``) and
+    the problem-axis-sharded one (``_fleet_bf_chunk_shard``): the body is
+    per-problem independent, so running it on a P/D-lane shard computes
+    exactly the rows the full program would.
     """
     from repro.core.accel.search_loops import (
         _bf_decode_digits,
         _bf_eval_part,
     )
-    TRACE_COUNTS["fleet_bf_chunk"] += 1
     P, S = desc.shape[0], desc.shape[1]
     n = static.n_nodes
     mm = T.shape[-1]
@@ -216,18 +240,88 @@ def _fleet_bf_chunk(static: StaticSpec, B: int, no_cut: bool,
         A, si, so, kk, cb_row, take)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3))
-def _fleet_sa_sweeps(static: StaticSpec, gran, has_cut_edges: bool,
-                     n_sweeps: int, A, menus, menu_sizes, clamp, kv_fix,
-                     state, temps, scale, cooling, k_min):
-    TRACE_COUNTS["fleet_sa_sweeps"] += 1
+@functools.partial(jax.jit, static_argnums=(0, 1, 2))
+def _fleet_bf_chunk(static: StaticSpec, B: int, no_cut: bool,
+                    A, desc, sigma, T, cb_row, take):
+    TRACE_COUNTS["fleet_bf_chunk"] += 1
+    return _fleet_bf_chunk_core(static, B, no_cut, A, desc, sigma, T,
+                                cb_row, take)
 
+
+def _shard_problem_axis(body, mesh, n_in: int, n_out, check_rep=True):
+    """``shard_map`` a fleet bucket body over the mesh's ``dev`` axis.
+
+    Pure data parallelism: every input and output splits its leading
+    problem axis (``P("dev")`` prefix specs cover the ``DeviceArrays`` /
+    SA-state pytrees leaf-wise), no collectives — each device runs the
+    verbatim bucket program on its P/D-lane slice, so per-problem results
+    are bit-identical to the single-program jit by construction. Callers
+    pad ragged bucket sizes to a multiple of D with no-op lanes
+    (``take=0`` / ``cap=0`` / duplicated lane 0, discarded on host).
+
+    ``check_rep=False`` for bodies containing ``lax.while_loop`` — the
+    static replication checker has no rule for it. The check only guards
+    replicated (``P()``) outputs; every output here is sharded, so
+    disabling it costs nothing.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    return shard_map(body, mesh=mesh, in_specs=(P("dev"),) * n_in,
+                     out_specs=jax.tree_util.tree_map(
+                         lambda _: P("dev"), n_out),
+                     check_rep=check_rep)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3))
+def _fleet_bf_chunk_shard(static: StaticSpec, B: int, no_cut: bool, mesh,
+                          A, desc, sigma, T, cb_row, take):
+    TRACE_COUNTS["fleet_bf_chunk_shard"] += 1
+    body = functools.partial(_fleet_bf_chunk_core, static, B, no_cut)
+    return _shard_problem_axis(body, mesh, 6, (0, 0, 0, 0))(
+        A, desc, sigma, T, cb_row, take)
+
+
+def _fleet_sa_sweeps_core(static: StaticSpec, gran, has_cut_edges: bool,
+                          n_sweeps: int, A, menus, menu_sizes, clamp,
+                          kv_fix, state, temps, scale, cooling, k_min):
     def one(Ai, mi, szi, ci, kfi, sti, ti, sci):
         return _sa_scan(static, gran, has_cut_edges, n_sweeps, Ai, mi,
                         szi, ci, kfi, sti, ti, sci, cooling, k_min)
 
     return jax.vmap(one)(A, menus, menu_sizes, clamp, kv_fix, state,
                          temps, scale)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3))
+def _fleet_sa_sweeps(static: StaticSpec, gran, has_cut_edges: bool,
+                     n_sweeps: int, A, menus, menu_sizes, clamp, kv_fix,
+                     state, temps, scale, cooling, k_min):
+    TRACE_COUNTS["fleet_sa_sweeps"] += 1
+    return _fleet_sa_sweeps_core(static, gran, has_cut_edges, n_sweeps, A,
+                                 menus, menu_sizes, clamp, kv_fix, state,
+                                 temps, scale, cooling, k_min)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3, 4))
+def _fleet_sa_sweeps_shard(static: StaticSpec, gran, has_cut_edges: bool,
+                           n_sweeps: int, mesh, A, menus, menu_sizes,
+                           clamp, kv_fix, state, temps, scale, cooling,
+                           k_min):
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    TRACE_COUNTS["fleet_sa_sweeps_shard"] += 1
+    body = functools.partial(_fleet_sa_sweeps_core, static, gran,
+                             has_cut_edges, n_sweeps)
+    # cooling / k_min are traced schedule scalars — replicated, not
+    # problem-axis data, hence the two trailing P() specs
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P("dev"),) * 8 + (P(), P()),
+        out_specs=(P("dev"), P("dev"), P("dev")),
+    )(A, menus, menu_sizes, clamp, kv_fix, state, temps, scale,
+      cooling, k_min)
 
 
 # ----------------------------------------------------------------------
@@ -332,7 +426,8 @@ class _BFMember:
 
 def fleet_brute_force(problems: Sequence, include_cuts: bool = False,
                       max_cuts: int = 1, max_points: Optional[int] = None,
-                      batch_size: int = 4096) -> List[OptimResult]:
+                      batch_size: int = 4096,
+                      devices: Optional[int] = None) -> List[OptimResult]:
     """Vmapped multi-problem brute force.
 
     Per-problem results (optimum design, objective, point count and
@@ -342,7 +437,13 @@ def fleet_brute_force(problems: Sequence, include_cuts: bool = False,
     executable each) and each bucket's chunks run lock-step across its
     members; each result's ``seconds`` is therefore its BUCKET's wall
     time (members search simultaneously — per-problem times don't sum).
+
+    ``devices=D`` distributes each bucket's problem lanes over the first
+    D visible devices (``shard_map`` over ``runtime_config.device_mesh``;
+    ragged lane counts pad with ``take=0`` no-op lanes). Results stay
+    bit-identical to ``devices=None`` for any D.
     """
+    mesh, D = _fleet_mesh(devices)
     results: List[Optional[OptimResult]] = [None] * len(problems)
     with _trace.span("fleet.bucketing", problems=len(problems),
                      optimiser="brute_force") as bsp:
@@ -372,7 +473,10 @@ def fleet_brute_force(problems: Sequence, include_cuts: bool = False,
         static = jevs[0].static
         assert all(j.static == static for j in jevs), \
             "bucketed problems must share a StaticSpec"
-        A = _stack([j.arrays for j in jevs])
+        P = len(members)
+        P_pad = _pad_lanes(P, D)
+        A = _stack([j.arrays for j in jevs]
+                   + [jevs[0].arrays] * (P_pad - P))
         idt = np.int64 if jevs[0].arrays.batch.dtype == jnp.int64 \
             else np.int32
         B = min(batch_size, _pow2ceil(max(m.total for m in members)))
@@ -393,6 +497,12 @@ def fleet_brute_force(problems: Sequence, include_cuts: bool = False,
         for k in range(K):
             tables = [m.tables_for(k, n_pad, s_pad, mm_pad, idt)
                       for m in members]
+            # no-op lanes padding P up to a multiple of the device count
+            # reuse the inert-tables shape (take stays 0 for them)
+            tables += [(np.full((3, n_pad), s_pad, idt),
+                        np.ones((3, n_pad, mm_pad), idt),
+                        np.zeros(max(n_pad - 1, 0), bool), None)
+                       ] * (P_pad - P)
             sigma_d = jnp.asarray(np.stack([t[0] for t in tables]))
             T_d = jnp.asarray(np.stack([t[1] for t in tables]))
             cb_np = np.stack([t[2] for t in tables])
@@ -406,8 +516,8 @@ def fleet_brute_force(problems: Sequence, include_cuts: bool = False,
             # and matches the per-problem loop's accounting exactly.
             pending: List[tuple] = []
             while True:
-                takes = np.zeros(len(members), np.int64)
-                descs = np.zeros((len(members), s_pad, 4), idt)
+                takes = np.zeros(P_pad, np.int64)
+                descs = np.zeros((P_pad, s_pad, 4), idt)
                 descs[:, :, 0] = 1
                 descs[:, :, 2] = 1
                 descs[:, :, 3] = 1
@@ -433,10 +543,18 @@ def fleet_brute_force(problems: Sequence, include_cuts: bool = False,
                         m.stopped = True
                 if not takes.any():
                     break
-                with _metrics.device_dispatch("fleet_bf_chunk", bucket=bi):
-                    out = _fleet_bf_chunk(
-                        static, B, k == 0, A, jnp.asarray(descs), sigma_d,
-                        T_d, cb_d, jnp.asarray(takes))
+                if mesh is None:
+                    with _metrics.device_dispatch("fleet_bf_chunk",
+                                                  bucket=bi):
+                        out = _fleet_bf_chunk(
+                            static, B, k == 0, A, jnp.asarray(descs),
+                            sigma_d, T_d, cb_d, jnp.asarray(takes))
+                else:
+                    with _metrics.device_dispatch("fleet_bf_chunk_shard",
+                                                  bucket=bi, devices=D):
+                        out = _fleet_bf_chunk_shard(
+                            static, B, k == 0, mesh, A, jnp.asarray(descs),
+                            sigma_d, T_d, cb_d, jnp.asarray(takes))
                 pending.append((out, takes, cb_np))
                 if len(pending) > 1:
                     absorb(pending.pop(0))
@@ -481,7 +599,8 @@ def fleet_annealing(problems: Sequence, seed: int = 0,
                     cooling: float = 0.98,
                     max_iters: Optional[int] = None,
                     objective_scale: Optional[float] = None,
-                    chains: int = 1) -> List[OptimResult]:
+                    chains: int = 1,
+                    devices: Optional[int] = None) -> List[OptimResult]:
     """Vmapped multi-problem device SA.
 
     One ``lax.scan`` sweep loop advances every problem's chains in
@@ -493,10 +612,16 @@ def fleet_annealing(problems: Sequence, seed: int = 0,
     random draw is chain-shaped, so padding cannot perturb the stream.
     As in ``fleet_brute_force``, each result's ``seconds`` is its
     bucket's wall time (members sweep simultaneously).
+
+    ``devices=D`` shards each bucket's problem lanes over the first D
+    visible devices (``shard_map``; ragged lane counts duplicate lane 0,
+    discarded on the host). Per-problem trajectories stay bit-identical
+    to ``devices=None`` — lanes never interact.
     """
     from repro.core.optimizers.annealing import LADDER_SPREAD, _scale_for
 
     chains = max(chains, 1)
+    mesh, D = _fleet_mesh(devices)
     results: List[Optional[OptimResult]] = [None] * len(problems)
     with _trace.span("fleet.bucketing", problems=len(problems),
                      optimiser="annealing") as bsp:
@@ -534,18 +659,36 @@ def fleet_annealing(problems: Sequence, seed: int = 0,
             total_sweeps = max(1, math.ceil(math.log(k_min / k_start)
                                             / math.log(cooling)))
 
-        with _metrics.device_dispatch("fleet_sa_sweeps", bucket=bi,
-                                      sweeps=total_sweeps):
-            state_st, temps_st, traces = _fleet_sa_sweeps(
-                static, sas[0].gran, sas[0].has_cut_edges, total_sweeps,
-                _stack([s.A for s in sas]),
-                jnp.stack([s.menus for s in sas]),
-                jnp.stack([s.menu_sizes for s in sas]),
-                jnp.stack([s.clamp for s in sas]),
-                jnp.stack([s.kv_fix for s in sas]),
-                _stack(states), jnp.stack(temps),
-                jnp.asarray(np.asarray(scales, np.float64)),
-                cooling, k_min)
+        # ragged-device padding: duplicate lane 0 (chain states included —
+        # the duplicate consumes an identical random stream and is simply
+        # never read back)
+        P = len(members)
+        pad = _pad_lanes(P, D) - P
+        stacked = (
+            _stack([s.A for s in sas] + [sas[0].A] * pad),
+            jnp.stack([s.menus for s in sas] + [sas[0].menus] * pad),
+            jnp.stack([s.menu_sizes for s in sas]
+                      + [sas[0].menu_sizes] * pad),
+            jnp.stack([s.clamp for s in sas] + [sas[0].clamp] * pad),
+            jnp.stack([s.kv_fix for s in sas] + [sas[0].kv_fix] * pad),
+            _stack(states + [states[0]] * pad),
+            jnp.stack(temps + [temps[0]] * pad),
+            jnp.asarray(np.asarray(scales + [scales[0]] * pad,
+                                   np.float64)),
+        )
+        if mesh is None:
+            with _metrics.device_dispatch("fleet_sa_sweeps", bucket=bi,
+                                          sweeps=total_sweeps):
+                state_st, temps_st, traces = _fleet_sa_sweeps(
+                    static, sas[0].gran, sas[0].has_cut_edges,
+                    total_sweeps, *stacked, cooling, k_min)
+        else:
+            with _metrics.device_dispatch("fleet_sa_sweeps_shard",
+                                          bucket=bi, sweeps=total_sweeps,
+                                          devices=D):
+                state_st, temps_st, traces = _fleet_sa_sweeps_shard(
+                    static, sas[0].gran, sas[0].has_cut_edges,
+                    total_sweeps, mesh, *stacked, cooling, k_min)
         with _trace.span("fleet.d2h.sa_traces"):
             t_obj = np.asarray(traces[0], np.float64)  # [P, sweeps, chains]
             t_feas = np.asarray(traces[1], bool)
@@ -584,26 +727,49 @@ def fleet_annealing(problems: Sequence, seed: int = 0,
 # rule based (Algorithm 2)
 # ----------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnums=(0, 1))
-def _fleet_rb_descend(static: StaticSpec, gran, A, menus, menu_sizes,
-                      clamp, si, so, kk, cb_row, part_mask, pidx, amort,
-                      cap):
+def _fleet_rb_descend_core(static: StaticSpec, gran, A, menus, menu_sizes,
+                           clamp, si, so, kk, cb_row, part_mask, pidx,
+                           amort, cap):
     """One greedy descent for EVERY problem in a bucket: the verbatim
     per-problem descent body (``_rb_descend_core``) under ``jax.vmap``.
     The vmapped ``lax.while_loop`` steps while ANY lane still has
     unblocked partition nodes; lanes whose descent converged early (and
     lanes masked out with ``cap == 0`` because their problem has no
     pending request this round) are carried through unchanged — no-ops in
-    lockstep with the rest of the bucket."""
-    TRACE_COUNTS["fleet_rb_descend"] += 1
+    lockstep with the rest of the bucket. Under the sharded jit each
+    device's while loop bounds only ITS lane slice, so a converged
+    device idles instead of stepping with the stragglers."""
     fn = functools.partial(_rb_descend_core, static, gran)
     return jax.vmap(fn)(A, menus, menu_sizes, clamp, si, so, kk, cb_row,
                         part_mask, pidx, amort, cap)
 
 
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def _fleet_rb_descend(static: StaticSpec, gran, A, menus, menu_sizes,
+                      clamp, si, so, kk, cb_row, part_mask, pidx, amort,
+                      cap):
+    TRACE_COUNTS["fleet_rb_descend"] += 1
+    return _fleet_rb_descend_core(static, gran, A, menus, menu_sizes,
+                                  clamp, si, so, kk, cb_row, part_mask,
+                                  pidx, amort, cap)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2))
+def _fleet_rb_descend_shard(static: StaticSpec, gran, mesh, A, menus,
+                            menu_sizes, clamp, si, so, kk, cb_row,
+                            part_mask, pidx, amort, cap):
+    TRACE_COUNTS["fleet_rb_descend_shard"] += 1
+    body = functools.partial(_fleet_rb_descend_core, static, gran)
+    return _shard_problem_axis(body, mesh, 12, (0, 0, 0, 0),
+                               check_rep=False)(
+        A, menus, menu_sizes, clamp, si, so, kk, cb_row, part_mask, pidx,
+        amort, cap)
+
+
 def fleet_rule_based(problems: Sequence,
                      time_budget_s: Optional[float] = None,
-                     multi_start: bool = True) -> List[OptimResult]:
+                     multi_start: bool = True,
+                     devices: Optional[int] = None) -> List[OptimResult]:
     """Vmapped multi-problem rule-based optimisation (Algorithm 2).
 
     Every problem runs the SAME host control flow as the per-problem
@@ -627,9 +793,15 @@ def fleet_rule_based(problems: Sequence,
     per-problem loop would — per-problem bit-identity holds only for
     ``time_budget_s=None``. ``optimise_portfolio`` therefore routes
     budgeted rule-based portfolios through the per-problem loop.
+
+    ``devices=D`` shards each round's descent lanes over the first D
+    visible devices (``shard_map``; ragged lane counts reuse the existing
+    ``cap=0`` no-op-lane contract). Merge sequences and results stay
+    bit-identical to ``devices=None``.
     """
     from repro.core.optimizers.rule_based import _algorithm2
 
+    mesh, D = _fleet_mesh(devices)
     results: List[Optional[OptimResult]] = [None] * len(problems)
     with _trace.span("fleet.bucketing", problems=len(problems),
                      optimiser="rule_based") as bsp:
@@ -643,6 +815,8 @@ def fleet_rule_based(problems: Sequence,
         bucket_sp.__enter__()
         members = [problems[i] for i in idxs]
         P = len(members)
+        P_pad = _pad_lanes(P, D)
+        pad = P_pad - P
         n_pad, pairs_pad, vals_pad, lut_pad, tabs = _bucket_tables(members)
         rbs = [DeviceRuleBased(p, pad_nodes=n_pad, pad_pairs=pairs_pad,
                                pad_vals=vals_pad, pad_lut=lut_pad,
@@ -651,11 +825,15 @@ def fleet_rule_based(problems: Sequence,
         assert all(r.static == static and r.gran == rbs[0].gran
                    for r in rbs), \
             "bucketed problems must share a StaticSpec"
-        A_st = _stack([r.A for r in rbs])
-        menus_st = jnp.stack([r.menus for r in rbs])
-        sizes_st = jnp.stack([r.menu_sizes for r in rbs])
-        clamp_st = jnp.stack([r.clamp for r in rbs])
-        amort = jnp.asarray(np.asarray([r.amort for r in rbs]),
+        A_st = _stack([r.A for r in rbs] + [rbs[0].A] * pad)
+        menus_st = jnp.stack([r.menus for r in rbs]
+                             + [rbs[0].menus] * pad)
+        sizes_st = jnp.stack([r.menu_sizes for r in rbs]
+                             + [rbs[0].menu_sizes] * pad)
+        clamp_st = jnp.stack([r.clamp for r in rbs]
+                             + [rbs[0].clamp] * pad)
+        amort = jnp.asarray(np.asarray([r.amort for r in rbs]
+                                       + [rbs[0].amort] * pad),
                             rbs[0].A.flops.dtype)
         idt_np = np.int64 if rbs[0].A.batch.dtype == jnp.int64 else np.int32
 
@@ -671,26 +849,37 @@ def fleet_rule_based(problems: Sequence,
         E = max(n_pad - 1, 0)
         rnd = 0
         while any(req is not None for req in pending):
-            si = np.ones((P, n_pad), idt_np)
-            so = np.ones((P, n_pad), idt_np)
-            kk = np.ones((P, n_pad), idt_np)
-            cb = np.zeros((P, E), bool)
-            pm = np.zeros((P, n_pad), bool)
-            pidx = np.zeros(P, idt_np)
-            cap = np.zeros(P, idt_np)        # 0 => masked no-op lane
+            si = np.ones((P_pad, n_pad), idt_np)
+            so = np.ones((P_pad, n_pad), idt_np)
+            kk = np.ones((P_pad, n_pad), idt_np)
+            cb = np.zeros((P_pad, E), bool)
+            pm = np.zeros((P_pad, n_pad), bool)
+            pidx = np.zeros(P_pad, idt_np)
+            cap = np.zeros(P_pad, idt_np)    # 0 => masked no-op lane
             for li, req in enumerate(pending):
                 if req is None:
                     continue
                 v, part = req
                 (si[li], so[li], kk[li], cb[li], pm[li], pidx[li],
                  cap[li]) = rbs[li].pack_request(v, part)
-            with _metrics.device_dispatch("fleet_rb_descend", bucket=bi,
-                                          round=rnd):
-                out = _fleet_rb_descend(
-                    static, rbs[0].gran, A_st, menus_st, sizes_st,
-                    clamp_st, jnp.asarray(si), jnp.asarray(so),
-                    jnp.asarray(kk), jnp.asarray(cb), jnp.asarray(pm),
-                    jnp.asarray(pidx), amort, jnp.asarray(cap))
+            if mesh is None:
+                with _metrics.device_dispatch("fleet_rb_descend",
+                                              bucket=bi, round=rnd):
+                    out = _fleet_rb_descend(
+                        static, rbs[0].gran, A_st, menus_st, sizes_st,
+                        clamp_st, jnp.asarray(si), jnp.asarray(so),
+                        jnp.asarray(kk), jnp.asarray(cb), jnp.asarray(pm),
+                        jnp.asarray(pidx), amort, jnp.asarray(cap))
+            else:
+                with _metrics.device_dispatch("fleet_rb_descend_shard",
+                                              bucket=bi, round=rnd,
+                                              devices=D):
+                    out = _fleet_rb_descend_shard(
+                        static, rbs[0].gran, mesh, A_st, menus_st,
+                        sizes_st, clamp_st, jnp.asarray(si),
+                        jnp.asarray(so), jnp.asarray(kk), jnp.asarray(cb),
+                        jnp.asarray(pm), jnp.asarray(pidx), amort,
+                        jnp.asarray(cap))
             with _trace.span("fleet.d2h.rb_descend"):
                 o_si, o_so, o_kk, pts = (np.asarray(x) for x in out)
             rnd += 1

@@ -395,7 +395,7 @@ def absorb_improvements(objs: np.ndarray, best_obj: float, points: int,
     return None, best_obj
 
 
-def _bf_decode_digits(B: int, idt, desc):
+def _bf_decode_digits(B: int, idt, desc, start=0):
     """Per-slot digits of a chunk, [B, S+1] (last column: the sentinel
     slot, always digit 0).
 
@@ -404,8 +404,12 @@ def _bf_decode_digits(B: int, idt, desc):
     offset ``b``); for a fast slot it is ``((a + off) // b) % size``. The
     host reduced the global index modulo stride/period BEFORE building the
     descriptor, so everything here fits 32 bits even for > 2^63 spaces.
+
+    ``start`` offsets the chunk-local rows — the sharded chunk program
+    decodes rows ``[start, start + B)`` of the SAME descriptor on each
+    device, so a D-way shard reproduces the single-device digits exactly.
     """
-    off = jnp.arange(B, dtype=idt)
+    off = start + jnp.arange(B, dtype=idt)
     kind, a, b, size = desc[:, 0], desc[:, 1], desc[:, 2], desc[:, 3]
     digit_slow = (a[None, :]
                   + (off[:, None] >= b[None, :]).astype(idt)) % size[None, :]
@@ -418,13 +422,15 @@ def _bf_decode_digits(B: int, idt, desc):
 
 
 def _bf_eval_part(static: StaticSpec, B: int, no_cut: bool,
-                  A: DeviceArrays, si, so, kk, cb_row, take):
+                  A: DeviceArrays, si, so, kk, cb_row, take, start=0):
     """Evaluate one decoded chunk; shared VERBATIM by the per-problem jit
     and the fleet vmap, which (with the decode being exact integer
-    arithmetic) makes their per-problem results bit-identical."""
+    arithmetic) makes their per-problem results bit-identical. ``start``
+    shifts the rows' global-within-chunk offsets (sharded chunks), so the
+    ``off < take`` feasibility mask stays chunk-global."""
     n = static.n_nodes
     idt = A.batch.dtype
-    off = jnp.arange(B, dtype=idt)
+    off = start + jnp.arange(B, dtype=idt)
     cb = jnp.broadcast_to(cb_row[None, :], (B, max(n - 1, 0)))
     res = _eval_core(static, A, si, so, kk, cb, single_partition=no_cut)
     objs = jnp.where(res["feasible"] & (off < take), res["objective"],
@@ -460,15 +466,81 @@ def _bf_chunk(static: StaticSpec, B: int, no_cut: bool,
     return _bf_chunk_core(static, B, no_cut, A, desc, sigma, T, cb_row, take)
 
 
+def _bf_shard_chunk(static: StaticSpec, B: int, no_cut: bool, D: int,
+                    A: DeviceArrays, desc, sigma, T, cb_row, take):
+    """Per-device body of the sharded chunk program (docs/distributed.md).
+
+    Device ``d`` of ``D`` decodes and evaluates the disjoint mixed-radix
+    range ``[d*B/D, (d+1)*B/D)`` of the chunk — same descriptor, shifted
+    ``start`` — so the union of the device-local rows is bit-identical to
+    the single-device ``_bf_chunk_core`` output. The incumbent combine is
+    an argmin over the device axis done with statically-replicated
+    collectives only (``pmin`` + masked ``psum``): device order equals
+    enumeration order and ``jnp.argmin`` is first-occurrence, so the
+    winning device's local argmin IS the chunk's first-occurrence global
+    argmin (all-infeasible chunks degrade to device 0's row 0, exactly
+    like ``argmin`` over an all-inf vector).
+    """
+    n = static.n_nodes
+    idt = A.batch.dtype
+    d = jax.lax.axis_index("dev").astype(idt)
+    Bl = B // D
+    start = d * Bl
+    digits = _bf_decode_digits(Bl, idt, desc, start=start).T   # [S+1, Bl]
+    iota_n = jnp.arange(n, dtype=idt)
+    si = T[0][iota_n[:, None], digits[sigma[0]]].T             # [Bl, n]
+    so = T[1][iota_n[:, None], digits[sigma[1]]].T
+    kk = T[2][iota_n[:, None], digits[sigma[2]]].T
+    objs, bsi, bso, bkk = _bf_eval_part(static, Bl, no_cut, A, si, so, kk,
+                                        cb_row, take, start=start)
+    local = jnp.min(objs)
+    gmin = jax.lax.pmin(local, "dev")
+    winner = jax.lax.pmin(
+        jnp.where(local == gmin, d, jnp.asarray(D, idt)), "dev")
+    pick = d == winner
+    bsi = jax.lax.psum(jnp.where(pick, bsi, 0), "dev")
+    bso = jax.lax.psum(jnp.where(pick, bso, 0), "dev")
+    bkk = jax.lax.psum(jnp.where(pick, bkk, 0), "dev")
+    return objs, bsi, bso, bkk
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 3))
+def _bf_chunk_shard(static: StaticSpec, B: int, no_cut: bool, mesh,
+                    A: DeviceArrays, desc, sigma, T, cb_row, take):
+    """D-way sharded twin of ``_bf_chunk``: inputs replicated, the chunk's
+    row axis split over the mesh's ``dev`` axis, objs reassembled in
+    enumeration order by the ``P("dev")`` out-spec. ``mesh`` is hashable,
+    so it rides along as one more static argument and device counts get
+    their own executables (asserted via the ``bf_chunk_shard`` trace key).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    TRACE_COUNTS["bf_chunk_shard"] += 1
+    D = int(mesh.devices.size)
+    body = functools.partial(_bf_shard_chunk, static, B, no_cut, D)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P(), P(), P(), P(), P()),
+        out_specs=(P("dev"), P(), P(), P()),
+    )(A, desc, sigma, T, cb_row, take)
+
+
 def brute_force_jax(problem, include_cuts: bool, max_cuts: int,
                     max_points: Optional[int], time_budget_s: Optional[float],
-                    batch_size: int) -> OptimResult:
+                    batch_size: int,
+                    devices: Optional[int] = None) -> OptimResult:
     """The jax engine behind ``optimizers.brute_force(engine="jax")``.
 
     Same enumeration order (hence identical optimum and history) as the
     numpy engine; candidate construction and evaluation run on device. Each
     cut set is enumerated in fixed-size padded chunks so the XLA program
     compiles once per problem family.
+
+    ``devices=D`` shards each chunk's row axis over the first D visible
+    devices (``runtime_config.device_mesh``); results stay bit-identical
+    to ``devices=None`` — the single-device program — for any D (the
+    randomized differential suite asserts the {1, 2, 8} grid).
     """
     from repro.core.optimizers.brute_force import (
         _clamp_tables,
@@ -492,6 +564,13 @@ def brute_force_jax(problem, include_cuts: bool, max_cuts: int,
     static, A = jev.static, jev.arrays
     idt = np.int64 if A.batch.dtype == jnp.int64 else np.int32
     B = min(batch_size, _pow2ceil(total))
+    mesh = None
+    if devices is not None:
+        from repro import runtime_config
+        mesh = runtime_config.device_mesh(devices)
+        D = int(mesh.devices.size)
+        B = -(-B // D) * D        # D | B (chunk boundaries may move; the
+        #                           history is chunking-invariant)
 
     base = backend.initial(graph).with_cuts(())
 
@@ -531,10 +610,17 @@ def brute_force_jax(problem, include_cuts: bool, max_cuts: int,
                     break
                 desc = chunk_descriptor(strides, sizes, produced, take,
                                         len(slots), idt)
-                with _metrics.device_dispatch("bf_chunk", take=take):
-                    objs, bi_si, bi_so, bi_kk = _bf_chunk(
-                        static, B, not cuts, A, jnp.asarray(desc),
-                        sigma_d, T_d, cb_row_d, take)
+                if mesh is None:
+                    with _metrics.device_dispatch("bf_chunk", take=take):
+                        objs, bi_si, bi_so, bi_kk = _bf_chunk(
+                            static, B, not cuts, A, jnp.asarray(desc),
+                            sigma_d, T_d, cb_row_d, take)
+                else:
+                    with _metrics.device_dispatch("bf_chunk_shard",
+                                                  take=take, devices=D):
+                        objs, bi_si, bi_so, bi_kk = _bf_chunk_shard(
+                            static, B, not cuts, mesh, A, jnp.asarray(desc),
+                            sigma_d, T_d, cb_row_d, take)
                 # blocking readback: this span, not the async dispatch
                 # above, absorbs the device compute time
                 with _trace.span("accel.d2h.bf_chunk", take=take):

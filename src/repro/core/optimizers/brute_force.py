@@ -44,16 +44,21 @@ def optimise(problem: Problem,
              max_points: Optional[int] = None,
              time_budget_s: Optional[float] = None,
              engine: str = "numpy",
-             batch_size: int = 4096) -> OptimResult:
+             batch_size: int = 4096,
+             devices: Optional[int] = None) -> OptimResult:
     from repro.core.accel import resolve_engine
     engine = resolve_engine(engine, allow_fallback=False)
+    if devices is not None and engine != "jax":
+        raise ValueError(
+            f"devices={devices} requires the jax engine (sharded chunk "
+            f"enumeration, docs/distributed.md); engine={engine!r}")
     if engine == "scalar":
         result = _optimise_scalar(problem, include_cuts, max_cuts,
                                   max_points, time_budget_s)
     elif engine == "jax":
         from repro.core.accel.search_loops import brute_force_jax
         result = brute_force_jax(problem, include_cuts, max_cuts, max_points,
-                                 time_budget_s, batch_size)
+                                 time_budget_s, batch_size, devices=devices)
     else:
         result = _optimise_batched(problem, include_cuts, max_cuts,
                                    max_points, time_budget_s, batch_size)

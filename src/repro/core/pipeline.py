@@ -121,6 +121,7 @@ def optimise_portfolio(archs: Sequence, shapes,
                        exec_model: str = "streaming",
                        opts: Optional[ModelOptions] = None,
                        engine: str = "auto",
+                       devices: Optional[int] = None,
                        **optimiser_kwargs) -> List[ShardingPlan]:
     """Optimise a whole portfolio of (architecture, platform) pairs in one
     fleet sweep.
@@ -155,6 +156,11 @@ def optimise_portfolio(archs: Sequence, shapes,
     lanes that converge early idling as no-ops). A portfolio may mix
     platforms AND objectives without splitting executables — both are
     device data. Returns one ``ShardingPlan`` per arch, in input order.
+
+    ``devices=D`` additionally shards each fleet bucket's problem lanes
+    over the first D visible devices (``shard_map`` over the
+    ``runtime_config.device_mesh``; see docs/distributed.md) — results
+    stay bit-identical to ``devices=None``. Requires the jax engine.
     """
     from repro.configs import get_arch
     from repro.core.accel import resolve_engine
@@ -196,12 +202,19 @@ def optimise_portfolio(archs: Sequence, shapes,
                     for a, s, p, o in
                     zip(archs, shapes, platforms, objectives)]
     eng = resolve_engine(engine, allow_fallback=False)
+    if devices is not None:
+        if eng != "jax":
+            raise ValueError(
+                f"devices={devices} requires the jax engine (sharded "
+                f"fleets, docs/distributed.md); engine resolved to "
+                f"{eng!r}")
+        optimiser_kwargs["devices"] = devices
     fleet_kw = {
         "brute_force": {"include_cuts", "max_cuts", "max_points",
-                        "batch_size"},
+                        "batch_size", "devices"},
         "annealing": {"seed", "k_start", "k_min", "cooling", "max_iters",
-                      "objective_scale", "chains"},
-        "rule_based": {"multi_start"},
+                      "objective_scale", "chains", "devices"},
+        "rule_based": {"multi_start", "devices"},
     }
     # the fleet covers the kwargs above; anything else routes through the
     # per-problem loop, whose results the fleet is bit-identical to
@@ -226,6 +239,13 @@ def optimise_portfolio(archs: Sequence, shapes,
         for r in results:
             _metrics.note_result(r, engine="fleet")
     else:
+        if "devices" in optimiser_kwargs and optimiser != "brute_force":
+            extra = sorted(set(optimiser_kwargs)
+                           - fleet_kw.get(optimiser, set()))
+            raise ValueError(
+                f"devices= for optimiser {optimiser!r} is only available "
+                f"on the fleet path; kwargs {extra} forced the "
+                f"per-problem loop, which has no sharded engine")
         with _trace.span("pipeline.optimise_portfolio.loop",
                          optimiser=optimiser, engine=eng,
                          problems=len(problems)):

@@ -1,7 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# The two lines above MUST run before any jax import: jax locks the device
-# count on first init, and the production meshes below need 512 host devices.
 """Multi-pod dry-run: prove every (architecture x shape x mesh) cell lowers,
 compiles, fits, and report its roofline terms — without any TPU.
 
@@ -24,13 +20,22 @@ Usage:
 """
 import argparse
 import json
+import os
 import re
 import sys
 import time
 import traceback
 from typing import Any, Dict, List, Optional, Tuple
 
-import jax
+from repro import runtime_config
+
+# The production meshes below need 512 host devices, and jax locks the
+# device count on backend init — request it BEFORE the jax import.
+# runtime_config merges the flag into any pre-existing XLA_FLAGS (the old
+# inline os.environ assignment silently clobbered the caller's flags).
+runtime_config.fake_devices(512)
+
+import jax  # noqa: E402 — after fake_devices, see above
 import jax.numpy as jnp
 
 from repro.configs import ARCHS, SHAPES_BY_NAME, get_arch, shape_applicable

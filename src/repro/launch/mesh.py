@@ -1,9 +1,13 @@
 """Production mesh construction.
 
 A FUNCTION (not a module-level constant) so importing this module never
-touches jax device state. The dry-run entrypoint sets
-``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
-import; smoke tests and benchmarks see the real single device.
+touches jax device state. Fake host devices for the 16x16 / 2x16x16
+production meshes come from ``repro.runtime_config.fake_devices(512)``
+(the dry-run entrypoint calls it before importing jax) — that module is
+the ONE place ``xla_force_host_platform_device_count`` is spelled;
+setting ``XLA_FLAGS`` by hand here or in callers is deprecated because a
+bare assignment clobbers whatever flags the launcher already exported.
+Smoke tests and benchmarks see the real single device.
 """
 from __future__ import annotations
 

@@ -187,6 +187,8 @@ reset = REGISTRY.reset
 TRACE_KEYS: Tuple[str, ...] = (
     "eval_batch", "sa_sweeps", "bf_chunk", "rb_descend",
     "fleet_sa_sweeps", "fleet_bf_chunk", "fleet_rb_descend",
+    "bf_chunk_shard", "fleet_bf_chunk_shard", "fleet_sa_sweeps_shard",
+    "fleet_rb_descend_shard",
 )
 
 _TRACE_PREFIX = "accel.traces."

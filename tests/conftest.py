@@ -1,9 +1,18 @@
-"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
-see the real single CPU device (the 512-device override belongs exclusively
-to launch/dryrun.py)."""
+"""Shared fixtures. NOTE: no hard-coded XLA_FLAGS here — smoke tests and
+benches must see the real single CPU device by default (the 512-device
+override belongs exclusively to launch/dryrun.py). Multi-device testing
+is an explicit opt-in instead: ``REPRO_FAKE_DEVICES=N pytest ...`` routes
+through ``runtime_config.apply_env()`` below — BEFORE anything can
+initialise a jax backend — which is how the CI shard job runs the
+devices-grid differential tests on 8 fake CPU devices. Without ``REPRO_*``
+variables set, ``apply_env`` touches nothing."""
 import contextlib
 
 import pytest
+
+from repro import runtime_config
+
+runtime_config.apply_env()
 
 from repro.configs import ARCHS, get_arch, reduced
 from repro.core.accel import jax_available
@@ -22,6 +31,7 @@ if not jax_available():
         "test_models.py",
         "test_optim.py",
         "test_runtime.py",
+        "test_shard.py",
         "test_steps.py",
     ]
 from repro.configs.base import ArchConfig, ShapeSpec

@@ -26,6 +26,7 @@ def test_repo_docs_are_clean():
     for path in check_docs.doc_files():
         errors += check_docs.check_python_blocks(path)
         errors += check_docs.check_links(path)
+    errors += check_docs.check_orphans(check_docs.doc_files())
     assert errors == [], "\n".join(errors)
 
 
@@ -103,6 +104,23 @@ def test_cumulative_session_binds_across_blocks(tmp_path):
     ```
     """)
     assert check_docs.check_python_blocks(path) == []
+
+
+def test_orphaned_doc_is_caught(tmp_path, monkeypatch):
+    """A docs/*.md file linked from neither hub (README.md nor
+    docs/architecture.md) is flagged; linked ones pass."""
+    monkeypatch.setattr(check_docs, "REPO_ROOT", str(tmp_path))
+    docs = tmp_path / "docs"
+    docs.mkdir()
+    (tmp_path / "README.md").write_text(
+        "see [arch](docs/architecture.md)")
+    (docs / "architecture.md").write_text(
+        "see [linked](linked.md)")
+    (docs / "linked.md").write_text("reachable via architecture.md")
+    (docs / "orphan.md").write_text("nobody links here")
+    errors = check_docs.check_orphans(check_docs.doc_files())
+    assert len(errors) == 1 and "orphaned doc" in errors[0], errors
+    assert errors[0].startswith(os.path.join("docs", "orphan.md"))
 
 
 def test_broken_intra_repo_link_is_caught(tmp_path, monkeypatch):

@@ -162,7 +162,7 @@ def test_trace_counts_shim_back_compat():
     from repro.obs.metrics import TRACE_COUNTS, TRACE_KEYS
     assert TC_EVAL is TRACE_COUNTS         # historic import home re-exports
     assert tuple(TRACE_COUNTS) == TRACE_KEYS
-    assert len(TRACE_COUNTS) == 7
+    assert len(TRACE_COUNTS) == 11         # 7 engine keys + 4 *_shard (PR 8)
     assert "bf_chunk" in TRACE_COUNTS
     assert TRACE_COUNTS["bf_chunk"] == 0   # re-materialised post-reset
     TRACE_COUNTS["bf_chunk"] += 1          # the jitted-body idiom

@@ -1,0 +1,173 @@
+"""Sharded engines (shard_map over the ``"dev"`` mesh axis).
+
+Bit-identity of the sharded engines against the single-device jax
+engines lives in ``test_random_differential.py`` (the devices∈{1,2,8}
+grid). This module pins everything else: that ``devices=`` really routes
+through the sharded executables (the ``*_shard`` ``TRACE_COUNTS`` keys
+and ``accel.dispatches.*`` counters tick, the plain ones don't), that
+ragged portfolios pad with no-op lanes rather than crash, that the
+portfolio pipeline threads ``devices=`` end to end, and that every
+devices= misuse fails loudly with the documented error.
+
+Runs on however many devices are visible: on the default single-device
+suite every test uses ``devices=1`` (a real mesh of one — the shard_map
+machinery is fully exercised); the CI ``shard`` job re-runs the suite
+under ``REPRO_FAKE_DEVICES=8``, where ``_multi()`` picks a genuinely
+multi-device count.
+"""
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.configs.base import ShapeSpec
+from repro.core.backends import BACKENDS
+from repro.core.graph_builder import build_hdgraph
+from repro.core.objectives import Problem
+from repro.core.optimizers import brute_force
+from repro.core.perfmodel import ModelOptions
+from repro.core.platform import Platform
+
+jax = pytest.importorskip("jax")
+
+from repro.core.accel.eval_jax import TRACE_COUNTS  # noqa: E402
+from repro.obs import metrics  # noqa: E402
+
+PLAT = Platform(name="t-4x4", mesh_axes=(("data", 4), ("model", 4)))
+TRAIN = ShapeSpec("train_tiny", 256, 16, "train")
+
+BF_KW = dict(max_points=300, batch_size=64)
+
+
+def _problem(arch_name="tinyllama-1.1b", shape=TRAIN, backend="spmd",
+             objective="throughput", **opts) -> Problem:
+    arch = reduced(get_arch(arch_name))
+    graph = build_hdgraph(arch, shape)
+    return Problem(graph=graph, platform=PLAT, backend=BACKENDS[backend],
+                   objective=objective, exec_model="streaming",
+                   opts=ModelOptions(**opts))
+
+
+def _multi() -> int:
+    """Largest grid device count the backend can serve (1 on the plain
+    suite, 8 under the CI shard job's REPRO_FAKE_DEVICES=8)."""
+    return max(d for d in (1, 2, 8) if d <= len(jax.devices()))
+
+
+def _dispatches(kind: str) -> int:
+    return metrics.counter(f"accel.dispatches.{kind}").value
+
+
+# ----------------------------------------------------------------------
+# devices= routes through the sharded executables (and only then)
+# ----------------------------------------------------------------------
+
+def test_bf_shard_ticks_shard_counters_not_plain():
+    """Dispatch counters tick per call (trace counters only on a fresh
+    trace, which an earlier test's cached executable can absorb — so the
+    positive assertions here are on dispatches)."""
+    D = _multi()
+    before_plain = TRACE_COUNTS["bf_chunk"]
+    brute_force(_problem(), engine="jax", devices=D, **BF_KW)
+    assert _dispatches("bf_chunk_shard") > 0
+    assert TRACE_COUNTS["bf_chunk"] == before_plain
+    assert _dispatches("bf_chunk") == 0
+
+
+def test_bf_plain_never_ticks_shard_counters():
+    brute_force(_problem(), engine="jax", **BF_KW)
+    assert _dispatches("bf_chunk") > 0
+    assert TRACE_COUNTS["bf_chunk_shard"] == 0
+    assert _dispatches("bf_chunk_shard") == 0
+
+
+def test_fleet_shard_counters_ragged_portfolio():
+    """Three lanes over D devices: every sharded fleet entry point pads
+    the ragged problem axis with no-op lanes and ticks its own counter,
+    leaving the plain fleet counters untouched."""
+    from repro.core.accel.fleet import (
+        fleet_annealing,
+        fleet_brute_force,
+        fleet_rule_based,
+    )
+    D = _multi()
+    probs = lambda: [_problem(), _problem(objective="latency"),  # noqa: E731
+                     _problem()]
+    fleet_brute_force(probs(), devices=D, **BF_KW)
+    fleet_annealing(probs(), seed=1, max_iters=30, devices=D)
+    fleet_rule_based(probs(), devices=D)
+    for kind in ("fleet_bf_chunk_shard", "fleet_sa_sweeps_shard",
+                 "fleet_rb_descend_shard"):
+        assert _dispatches(kind) > 0, kind
+    for kind in ("fleet_bf_chunk", "fleet_sa_sweeps", "fleet_rb_descend"):
+        assert TRACE_COUNTS[kind] == 0, kind
+        assert _dispatches(kind) == 0, kind
+
+
+def test_fleet_shard_single_lane_smaller_than_mesh():
+    """P=1 lane on a D-device mesh: padding covers the whole remainder."""
+    from repro.core.accel.fleet import fleet_brute_force
+    D = _multi()
+    got = fleet_brute_force([_problem()], devices=D, **BF_KW)[0]
+    ref = fleet_brute_force([_problem()], **BF_KW)[0]
+    assert got.variables == ref.variables
+    assert got.history == ref.history
+
+
+def test_pad_lanes():
+    from repro.core.accel.fleet import _pad_lanes
+    assert _pad_lanes(3, 1) == 3
+    assert _pad_lanes(3, 2) == 4
+    assert _pad_lanes(3, 8) == 8
+    assert _pad_lanes(8, 8) == 8
+    assert _pad_lanes(9, 8) == 16
+
+
+# ----------------------------------------------------------------------
+# the portfolio pipeline threads devices= end to end
+# ----------------------------------------------------------------------
+
+def test_optimise_portfolio_devices_matches_plain():
+    from repro.core.pipeline import optimise_portfolio
+
+    archs = [reduced(get_arch("tinyllama-1.1b"))] * 2
+    kw = dict(optimiser="brute_force", **BF_KW)
+    ref = optimise_portfolio(archs, TRAIN, PLAT, **kw)
+    got = optimise_portfolio(archs, TRAIN, PLAT, devices=_multi(), **kw)
+    for r, g in zip(ref, got):
+        assert g.objective_value == r.objective_value
+        assert g.latency == r.latency
+        assert g.throughput == r.throughput
+        assert [p.node_indices for p in g.partitions] \
+            == [p.node_indices for p in r.partitions]
+
+
+# ----------------------------------------------------------------------
+# misuse fails loudly
+# ----------------------------------------------------------------------
+
+def test_bf_devices_requires_jax_engine():
+    with pytest.raises(ValueError, match="requires the jax engine"):
+        brute_force(_problem(), engine="numpy", devices=1, **BF_KW)
+
+
+def test_portfolio_devices_requires_jax_engine():
+    from repro.core.pipeline import optimise_portfolio
+    with pytest.raises(ValueError, match="requires the jax engine"):
+        optimise_portfolio([reduced(get_arch("tinyllama-1.1b"))], TRAIN,
+                           PLAT, engine="numpy", devices=1)
+
+
+def test_portfolio_devices_rejects_loop_fallback():
+    """Kwargs that force the per-problem loop (no sharded engine there)
+    must not silently drop devices=."""
+    from repro.core.pipeline import optimise_portfolio
+    with pytest.raises(ValueError, match="per-problem loop"):
+        optimise_portfolio([reduced(get_arch("tinyllama-1.1b"))], TRAIN,
+                           PLAT, optimiser="annealing", devices=1,
+                           time_budget_s=0.1)
+
+
+def test_device_mesh_over_capacity_names_recipe():
+    from repro import runtime_config
+    n = len(jax.devices())
+    with pytest.raises(ValueError, match="fake_devices"):
+        runtime_config.device_mesh(n + 1)

@@ -16,6 +16,11 @@ Two checks over the repo's user-facing markdown (README.md + docs/*.md):
    on disk. Links that escape the repo root (GitHub UI paths like the CI
    badge's ``../../actions/...``) and absolute URLs are skipped.
 
+3. **Orphans** — every ``docs/*.md`` file must be reachable from the two
+   hub documents (``README.md`` or ``docs/architecture.md``). A doc
+   nobody links to is a doc nobody reads: adding one without wiring it
+   into the index is the failure mode this catches.
+
 Run directly (``python tools/check_docs.py``; needs PYTHONPATH=src, like
 the test suite), via ``./ci.sh`` (docs lane) or through
 ``tests/test_docs.py``. Exits non-zero listing every failure as
@@ -190,6 +195,44 @@ def check_links(path: str) -> List[str]:
     return errors
 
 
+def _hub_link_targets() -> set:
+    """Realpaths of every intra-repo link target in the hub documents."""
+    hubs = (os.path.join(REPO_ROOT, "README.md"),
+            os.path.join(REPO_ROOT, "docs", "architecture.md"))
+    linked = set()
+    for hub in hubs:
+        if not os.path.exists(hub):
+            continue
+        base = os.path.dirname(hub)
+        with open(hub, encoding="utf-8") as f:
+            for line in f:
+                for target in _LINK.findall(line):
+                    if target.startswith(("http://", "https://",
+                                          "mailto:", "#")):
+                        continue
+                    target = target.split("#")[0]
+                    if target:
+                        linked.add(os.path.realpath(
+                            os.path.join(base, target)))
+    return linked
+
+
+def check_orphans(files: List[str]) -> List[str]:
+    """Flag docs/*.md files no hub document links to (rule 3)."""
+    linked = _hub_link_targets()
+    docs_dir = os.path.realpath(os.path.join(REPO_ROOT, "docs"))
+    errors = []
+    for path in files:
+        real = os.path.realpath(path)
+        if os.path.dirname(real) != docs_dir:
+            continue                              # README itself
+        if real not in linked:
+            rel = os.path.relpath(path, REPO_ROOT)
+            errors.append(f"{rel}:1: orphaned doc — not linked from "
+                          f"README.md or docs/architecture.md")
+    return errors
+
+
 def main() -> int:
     files = doc_files()
     errors: List[str] = []
@@ -199,6 +242,7 @@ def main() -> int:
                       if lang == "python")
         errors += check_python_blocks(path)
         errors += check_links(path)
+    errors += check_orphans(files)
     for e in errors:
         print(e)
     print(f"check_docs: {len(files)} files, {blocks} python blocks, "
