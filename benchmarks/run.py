@@ -5,7 +5,7 @@ timings and engine lanes for the accelerated search.
     python -m benchmarks.run [names...] [--smoke] [--hetero]
 
 ``--smoke`` shrinks the smoke-capable lanes (``accel``, ``fleet``,
-``shard``) to their smallest spaces for CI: the accel smoke lane runs the
+``shard``, ``serve``) to their smallest spaces for CI: the accel smoke lane runs the
 smallest Table-IV space, asserts the jax==numpy optimum agreement, and
 fails if it exceeds 60 s. ``--hetero`` switches the ``fleet`` lane to the
 heterogeneous-platform grid (networks x platforms as ONE fleet program;
@@ -40,6 +40,7 @@ from benchmarks import (  # noqa: E402
     fig4_batch_partitions,
     fleet_sweep,
     roofline,
+    serve_bench,
     shard_sweep,
     table4_design_space,
     table5_objectives,
@@ -66,14 +67,15 @@ ALL = {
     "accel": table4_design_space.run_accel,
     "fleet": fleet_sweep.run,
     "shard": shard_sweep.run,
+    "serve": serve_bench.run,
     "tests": run_tests,
 }
 
 #: lanes that run only when asked for explicitly
-_ON_DEMAND = ("tests", "accel", "fleet", "shard")
+_ON_DEMAND = ("tests", "accel", "fleet", "shard", "serve")
 
 #: lanes accepting the ``--smoke`` flag
-_SMOKEABLE = ("accel", "fleet", "shard")
+_SMOKEABLE = ("accel", "fleet", "shard", "serve")
 
 
 def _bench_report():

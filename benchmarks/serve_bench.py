@@ -1,0 +1,156 @@
+"""Serve lane: SLO benchmark for mapping-as-a-service.
+
+Three phases (docs/service.md documents the SLO lane):
+
+  identity gate   every request the service will see is first solved
+                  directly (``OPTIMIZERS["rule_based"](p, engine="jax")``)
+                  and the served response must be BIT-identical —
+                  design, objective, point count and history. A serving
+                  layer that perturbs results is a non-starter, so the
+                  gate runs before any throughput number is recorded.
+  throughput      a repeated-request workload (unique requests x
+                  repeats, shuffled with a pinned seed) submitted from
+                  several threads against a fresh server: requests/s,
+                  p50/p99 time-to-design and the cache hit rate land in
+                  the run record as ``service.*`` gauges — the BENCH
+                  row's ``service`` section.
+  no-jax          without jax the lane only asserts the failure mode:
+                  an explicit ``engine="jax"`` request must fail fast
+                  with ``EngineUnavailable`` on its future — never hang.
+
+``--smoke`` shrinks to two networks for CI (<60 s).
+"""
+from __future__ import annotations
+
+import random
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import Reporter, make_problem, zoo_arch
+from repro.core.accel import EngineUnavailable, jax_available
+from repro.core.optimizers import OPTIMIZERS
+from repro.obs import metrics
+
+SMOKE_NETS = ("TFC", "LeNet")
+FULL_NETS = ("3-layer", "TFC", "LeNet", "CNV")
+OBJECTIVES = ("latency", "throughput")
+REPEATS = 3          # each unique request resubmitted this many times
+THREADS = 4
+
+
+def _no_jax_gate() -> int:
+    """Engine-unavailable path: the future must fail fast, not hang."""
+    from repro.service import MappingServer
+    with MappingServer() as srv:
+        fut = srv.submit_problem(make_problem(zoo_arch("TFC")),
+                                 engine="jax")
+        try:
+            fut.result(timeout=30)
+        except EngineUnavailable as e:
+            print(f"[serve] no jax: engine request failed fast ({e})")
+            return 0
+        raise AssertionError(
+            "engine='jax' request without jax must raise "
+            "EngineUnavailable on its future")
+
+
+def run(smoke: bool = False) -> None:
+    if not jax_available():
+        _no_jax_gate()
+        return
+    from repro.service import MappingServer
+
+    nets = SMOKE_NETS if smoke else FULL_NETS
+    specs = [(net, obj) for net in nets for obj in OBJECTIVES]
+
+    def fresh(net: str, obj: str):
+        return make_problem(zoo_arch(net), objective=obj)
+
+    rep = Reporter("serve")
+
+    # ---- identity gate: served == direct, bitwise --------------------
+    direct = {}
+    for net, obj in specs:
+        r = OPTIMIZERS["rule_based"](fresh(net, obj), engine="jax")
+        direct[(net, obj)] = r
+    with MappingServer() as srv:
+        futs = {s: srv.submit_problem(fresh(*s), optimiser="rule_based",
+                                      engine="jax") for s in specs}
+        for s, fut in futs.items():
+            got, want = fut.result(600).result, direct[s]
+            assert (got.variables == want.variables
+                    and got.evaluation.objective
+                    == want.evaluation.objective
+                    and got.points == want.points
+                    and got.history == want.history), \
+                f"served result for {s} differs from direct engine run"
+    print(f"[serve] identity gate: {len(specs)} served results "
+          f"bit-identical to direct engine runs")
+
+    # ---- throughput: repeated workload, threaded submitters ----------
+    workload = [s for s in specs for _ in range(REPEATS)]
+    random.Random(0).shuffle(workload)
+    latencies = []
+    lat_lock = threading.Lock()
+
+    with MappingServer() as srv:
+        t0 = time.time()
+
+        def submitter(slice_):
+            # one round trip per request (submit -> design) so later
+            # repeats genuinely hit the solved cache instead of all
+            # coalescing inside one dispatcher wave
+            out = []
+            for s in slice_:
+                t_sub = time.monotonic()
+                fut = srv.submit_problem(fresh(*s),
+                                         optimiser="rule_based",
+                                         engine="jax")
+                fut.result(600)
+                out.append(time.monotonic() - t_sub)
+            with lat_lock:
+                latencies.extend(out)
+
+        threads = [threading.Thread(target=submitter,
+                                    args=(workload[i::THREADS],))
+                   for i in range(THREADS)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.time() - t0
+
+    lat = np.asarray(sorted(latencies))
+    p50, p99 = (float(np.percentile(lat, q)) for q in (50, 99))
+    rps = len(workload) / wall
+    snap = metrics.snapshot()["counters"]
+    hits = snap.get("service.cache.hits", 0)
+    misses = snap.get("service.cache.misses", 0)
+    coalesced = snap.get("service.requests.coalesced", 0)
+    hit_rate = hits / max(hits + misses, 1)
+
+    # the SLOs the BENCH row quotes (bench_report's service section)
+    metrics.gauge("service.requests_per_s").set(rps)
+    metrics.gauge("service.latency_p50_s").set(p50)
+    metrics.gauge("service.latency_p99_s").set(p99)
+    metrics.gauge("service.cache_hit_rate").set(hit_rate)
+
+    rep.add(nets=len(nets), requests=len(workload), threads=THREADS,
+            wall_s=round(wall, 2), requests_per_s=round(rps, 2),
+            p50_s=round(p50, 4), p99_s=round(p99, 4),
+            cache_hits=hits, coalesced=coalesced,
+            hit_rate=round(hit_rate, 3))
+    rep.print_table("mapping-as-a-service SLOs")
+    rep.save()
+
+    # a repeated workload that never hits the cache (or never runs a
+    # round) means the serving layer is broken, not just slow
+    assert hits + coalesced > 0, \
+        "repeated workload produced no cache hits or coalesces"
+    assert snap.get("service.requests.submitted", 0) > 0
+    assert snap.get("service.rounds", 0) > 0, \
+        "no lockstep rounds ran on a jax workload"
+    if smoke:
+        assert wall < 60, f"serve smoke took {wall:.0f}s (budget 60s)"

@@ -72,7 +72,23 @@ if python -c "from repro.core.accel import jax_available as j; raise SystemExit(
     test -s "$SHARD_OUT/BENCH_shard.json"
     rm -rf "$SHARD_OUT"
     echo "ci.sh: shard smoke OK (8-device grid bit-identical + BENCH row valid)"
+
+    # The serve smoke step: mapping-as-a-service under a repeated-request
+    # workload. The lane gates on served==direct bit-identity before any
+    # throughput number, asserts cache hits / lockstep rounds are non-zero
+    # and fails itself beyond 60 s (docs/service.md). Its BENCH row carries
+    # the service SLO gauges (requests/s, p50/p99, hit rate).
+    SERVE_OUT="$(mktemp -d)"
+    BENCH_OUT="$SERVE_OUT" python -m benchmarks.run serve --smoke
+    python tools/bench_report.py validate "$SERVE_OUT/runrecords.jsonl" --lane serve
+    test -s "$SERVE_OUT/BENCH_serve.json"
+    rm -rf "$SERVE_OUT"
+    echo "ci.sh: serve smoke OK (served results bit-identical + BENCH row valid)"
 else
     echo "ci.sh: obs smoke skipped (jax unavailable; record layer covered by tests/test_obs.py)"
     echo "ci.sh: shard smoke skipped (jax unavailable)"
+    # without jax the serve lane only asserts the failure mode: an
+    # explicit jax request must fail fast with EngineUnavailable, not hang
+    python -m benchmarks.run serve --smoke
+    echo "ci.sh: serve no-jax gate OK (EngineUnavailable surfaced, no hang)"
 fi

@@ -28,12 +28,14 @@ matrix cell:
                            ``TRACED_HELPERS`` (name -> static parameter
                            names).
 
-  ast/unseeded-random      tests must not draw from global random state
-                           (``np.random.<draw>(...)``, ``random.<draw>``
-                           module calls): the randomized differential
-                           suite's reproducibility depends on every draw
-                           flowing from an explicit seed
-                           (``random.Random(seed)``,
+  ast/unseeded-random      tests, benchmarks and the mapping service
+                           (``repro/service/``) must not draw from global
+                           random state (``np.random.<draw>(...)``,
+                           ``random.<draw>`` module calls): the randomized
+                           differential suite's reproducibility — and the
+                           determinism of the threaded service tests —
+                           depends on every draw flowing from an explicit
+                           seed (``random.Random(seed)``,
                            ``np.random.default_rng(seed)``).
 
 The pack is pure ``ast`` — the no-jax CI lane runs it with nothing but the
@@ -61,6 +63,9 @@ NO_JAX_PREFIXES: Tuple[str, ...] = (
     "repro/data/",
     "repro/analysis/",
     "repro/obs/",
+    # the mapping service must serve host-engine requests without jax;
+    # its lockstep engine reaches jax lazily inside the function
+    "repro/service/",
     # must stay importable (and callable, bar device_mesh) without jax:
     # it is the thing that configures the process BEFORE jax loads
     "repro/runtime_config.py",
@@ -391,7 +396,10 @@ def run(repo_root: str) -> Dict[str, List[Violation]]:
             check_eager_jax_import(tree, rel_src)
         by_rule["ast/traced-python-branch"] += \
             check_traced_python_branch(tree, rel_src)
-    for sub in ("tests", "benchmarks"):
+    # the service package joins the seeded-randomness surface: flaky
+    # thread scheduling must never hide behind nondeterministic draws
+    for sub in ("tests", "benchmarks", os.path.join("src", "repro",
+                                                    "service")):
         for path in _py_files(repo_root, sub):
             rel = _rel(path, repo_root)
             with open(path, encoding="utf-8") as f:

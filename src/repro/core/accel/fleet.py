@@ -82,7 +82,7 @@ from repro.obs import metrics as _metrics
 from repro.obs import trace as _trace
 
 __all__ = ["fleet_brute_force", "fleet_annealing", "fleet_rule_based",
-           "bucket_indices"]
+           "bucket_indices", "bucket_key"]
 
 
 def _stack(trees):
@@ -152,6 +152,17 @@ def _bucket_key(problem, tiered: bool) -> tuple:
             dataclasses.astuple(problem.opts),
             bool(problem.graph.cut_edges),
             _node_tier(len(problem.graph.nodes)) if tiered else 0)
+
+
+def bucket_key(problem, tiered: bool = False) -> tuple:
+    """Public trace-signature key: problems with equal keys share one
+    ``StaticSpec`` and hence one fleet executable (``_bucket_key``
+    documents exactly what the key holds and why platform/objective are
+    absent). ``tiered=False`` matches the rule-based/SA fleets, which is
+    also what the service admission queue (``repro/service/queue.py``)
+    buckets incoming requests by: requests with equal untiered keys can
+    join the same in-flight lockstep round as late-joiner lanes."""
+    return _bucket_key(problem, tiered)
 
 
 def bucket_indices(problems, tiered: bool = True) -> List[List[int]]:

@@ -157,6 +157,15 @@ def optimise_portfolio(archs: Sequence, shapes,
     platforms AND objectives without splitting executables — both are
     device data. Returns one ``ShardingPlan`` per arch, in input order.
 
+    Duplicate problems — equal ``lowering.problem_fingerprint``, i.e.
+    identical canonical lowered programs — are optimised ONCE and the
+    single result fans out to every duplicate (the
+    ``pipeline.portfolio.coalesced`` counter records how many). The
+    fan-out is exact: every engine is deterministic given its seed, so a
+    duplicate's re-run would be bit-identical anyway. The only exception
+    is ``time_budget_s``, whose wall-clock truncation is not a pure
+    function of the problem; budgeted calls keep per-duplicate runs.
+
     ``devices=D`` additionally shards each fleet bucket's problem lanes
     over the first D visible devices (``shard_map`` over the
     ``runtime_config.device_mesh``; see docs/distributed.md) — results
@@ -202,6 +211,32 @@ def optimise_portfolio(archs: Sequence, shapes,
                     for a, s, p, o in
                     zip(archs, shapes, platforms, objectives)]
     eng = resolve_engine(engine, allow_fallback=False)
+    # Identical Problems — same canonical lowered program, hence identical
+    # results from every deterministic engine — used to be re-validated,
+    # re-lowered and re-searched once per duplicate. Coalesce them by the
+    # canonical content hash (``lowering.problem_fingerprint``, the same
+    # keying path the service cache and the recompile lint's spec builder
+    # share) and fan the single result out. Wall-clock budgets are the
+    # one knob that makes re-runs non-identical, so budgeted calls keep
+    # per-duplicate runs.
+    alias_of: dict = {}
+    unique_idx = list(range(len(problems)))
+    if len(problems) > 1 and "time_budget_s" not in optimiser_kwargs:
+        from repro.core.accel.lowering import problem_fingerprint
+        with _trace.span("pipeline.dedupe", problems=len(problems)):
+            first_at: dict = {}
+            unique_idx = []
+            for i, p in enumerate(problems):
+                fp = problem_fingerprint(p)
+                if fp in first_at:
+                    alias_of[i] = first_at[fp]
+                else:
+                    first_at[fp] = i
+                    unique_idx.append(i)
+        if alias_of:
+            _metrics.counter("pipeline.portfolio.coalesced").inc(
+                len(alias_of))
+    run_problems = [problems[i] for i in unique_idx]
     if devices is not None:
         if eng != "jax":
             raise ValueError(
@@ -232,8 +267,9 @@ def optimise_portfolio(archs: Sequence, shapes,
                   "annealing": fleet_annealing,
                   "rule_based": fleet_rule_based}[optimiser]
         with _trace.span("pipeline.optimise_portfolio.fleet",
-                         optimiser=optimiser, problems=len(problems)):
-            results = runner(problems, **optimiser_kwargs)
+                         optimiser=optimiser,
+                         problems=len(run_problems)):
+            results = runner(run_problems, **optimiser_kwargs)
         # the fleet runners bypass the optimiser entry points (which note
         # their own results), so account for their results here
         for r in results:
@@ -248,14 +284,18 @@ def optimise_portfolio(archs: Sequence, shapes,
                 f"per-problem loop, which has no sharded engine")
         with _trace.span("pipeline.optimise_portfolio.loop",
                          optimiser=optimiser, engine=eng,
-                         problems=len(problems)):
+                         problems=len(run_problems)):
             results = [OPTIMIZERS[optimiser](p, engine=eng,
                                              **optimiser_kwargs)
-                       for p in problems]
-    with _trace.span("pipeline.export_plans", count=len(results)):
+                       for p in run_problems]
+    # fan the unique results back out over the duplicates, input order
+    pos = {orig: k for k, orig in enumerate(unique_idx)}
+    all_results = [results[pos[alias_of.get(i, i)]]
+                   for i in range(len(problems))]
+    with _trace.span("pipeline.export_plans", count=len(all_results)):
         return [export_plan(p.graph, r.variables, p.platform, exec_model,
                             r.evaluation)
-                for p, r in zip(problems, results)]
+                for p, r in zip(problems, all_results)]
 
 
 def baseline_plan(arch: ArchConfig, shape: ShapeSpec,

@@ -1,0 +1,38 @@
+"""Mapping-as-a-service: a streaming request front-end over the fleet.
+
+Public surface (docs/service.md):
+
+- :class:`MappingServer` — threaded ``submit()``/future front-end over
+  ``optimise_portfolio``'s engine stack, with an stdlib-HTTP adapter
+  (``python -m repro.service.server``).
+- :class:`SolvedCache` / :class:`SolvedDesign` / :func:`request_key` —
+  content-addressed solved-problem cache keyed by the canonical hash of
+  the lowered program (``lowering.problem_fingerprint``) plus the
+  search configuration.
+- :class:`AdmissionQueue` / :func:`run_rule_based_lockstep` — bounded
+  admission and dynamic-membership fleet rounds (late joiners enter as
+  fresh lanes, early leavers idle as ``cap=0`` no-ops).
+
+The package imports no jax at module scope: under ``REPRO_NO_JAX`` the
+server serves host-engine requests and explicit jax requests fail fast
+with ``EngineUnavailable``.
+"""
+from repro.service.cache import SolvedCache, SolvedDesign, request_key
+from repro.service.queue import (
+    AdmissionQueue,
+    DeadlineExceeded,
+    LockstepJob,
+    ServiceClosed,
+    ServiceError,
+    ServiceOverloaded,
+    run_rule_based_lockstep,
+)
+from repro.service.server import MappingResponse, MappingServer, serve_http
+
+__all__ = [
+    "MappingServer", "MappingResponse", "serve_http",
+    "SolvedCache", "SolvedDesign", "request_key",
+    "AdmissionQueue", "LockstepJob", "run_rule_based_lockstep",
+    "ServiceError", "ServiceOverloaded", "ServiceClosed",
+    "DeadlineExceeded",
+]

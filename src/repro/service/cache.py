@@ -1,0 +1,188 @@
+"""Content-addressed solved-problem cache for mapping-as-a-service.
+
+The key contract (docs/service.md) has two layers:
+
+  ``lowering.problem_fingerprint``  canonical hash of the lowered
+        program: StaticSpec (built through ``build_static_spec``, the
+        same path that keys the XLA executable cache and that
+        ``recompile_lint`` audits) plus every array ``lower_program``
+        ships to the device — per-node workloads, kind index sets,
+        platform scalars, fold-realisability cube, objective flag,
+        amortisation factor.
+  ``request_key``  sha256 over that fingerprint PLUS the optimiser
+        name, the resolved engine and the canonicalised optimiser
+        kwargs — because the *design* a request gets back depends on
+        how it is searched, not only on what is searched (the SA rng
+        differs between host and device engines, for example).
+
+Equal keys therefore imply bit-identical results from a re-run, which is
+what makes serving a cached design indistinguishable from running the
+engine: the stored ``Variables`` are re-evaluated through the float64
+scalar reference on every hit (``SolvedDesign.to_result``), exactly as a
+fresh ``OptimResult`` would be.
+
+The cache itself is a thread-safe LRU with hit/miss/eviction counters
+(``service.cache.*``) and an optional JSONL persistence file so a
+restarted server starts warm. stdlib + numpy only (no jax): the cache
+must work in the ``REPRO_NO_JAX`` matrix, where the server still serves
+host-engine requests.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+from repro.core.accel.lowering import problem_fingerprint
+from repro.core.hdgraph import Variables
+from repro.core.optimizers.common import OptimResult
+from repro.obs import metrics as _metrics
+
+__all__ = ["SolvedDesign", "SolvedCache", "request_key"]
+
+
+def request_key(problem, optimiser: str, engine: str,
+                optimiser_kwargs: Optional[dict] = None) -> str:
+    """Cache/coalesce key for one mapping request (see module docstring)."""
+    kw = sorted((optimiser_kwargs or {}).items())
+    h = hashlib.sha256(b"repro.service.request_key.v1")
+    h.update(problem_fingerprint(problem).encode())
+    h.update(f"|{optimiser}|{engine}|{kw!r}".encode())
+    return h.hexdigest()
+
+
+@dataclass(frozen=True)
+class SolvedDesign:
+    """The engine-independent half of an ``OptimResult``: everything
+    except the ``Evaluation``, which is re-derived from the requesting
+    problem on every hit (deterministic, so bit-identical)."""
+
+    cuts: Tuple[int, ...]
+    s_in: Tuple[int, ...]
+    s_out: Tuple[int, ...]
+    kern: Tuple[int, ...]
+    points: int
+    seconds: float
+    history: Tuple[Tuple[int, float], ...]
+    name: str
+
+    @classmethod
+    def from_result(cls, result: OptimResult) -> "SolvedDesign":
+        v = result.variables
+        return cls(tuple(v.cuts), tuple(v.s_in), tuple(v.s_out),
+                   tuple(v.kern), int(result.points),
+                   float(result.seconds),
+                   tuple((int(p), float(o)) for p, o in result.history),
+                   result.name)
+
+    def to_result(self, problem) -> OptimResult:
+        v = Variables(self.cuts, self.s_in, self.s_out, self.kern)
+        return OptimResult(v, problem.evaluate(v), self.points,
+                           self.seconds, [tuple(e) for e in self.history],
+                           name=self.name)
+
+    def to_json(self, key: str) -> dict:
+        return {"key": key, "cuts": list(self.cuts),
+                "s_in": list(self.s_in), "s_out": list(self.s_out),
+                "kern": list(self.kern), "points": self.points,
+                "seconds": self.seconds,
+                "history": [list(e) for e in self.history],
+                "name": self.name}
+
+    @classmethod
+    def from_json(cls, rec: dict) -> "SolvedDesign":
+        return cls(tuple(rec["cuts"]), tuple(rec["s_in"]),
+                   tuple(rec["s_out"]), tuple(rec["kern"]),
+                   int(rec["points"]), float(rec["seconds"]),
+                   tuple((int(p), float(o)) for p, o in rec["history"]),
+                   str(rec["name"]))
+
+
+class SolvedCache:
+    """Bounded LRU of ``request_key -> SolvedDesign``, thread-safe.
+
+    ``path`` enables JSONL persistence: ``load()`` replays the file in
+    order (file order IS the LRU order), ``save()`` rewrites it from the
+    current contents. Counters: ``service.cache.hits`` / ``.misses`` /
+    ``.evictions`` / ``.inserts``; gauge ``service.cache.size``.
+    """
+
+    def __init__(self, capacity: int = 512,
+                 path: Optional[str] = None) -> None:
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self.path = path
+        self._lock = threading.Lock()
+        self._entries: "OrderedDict[str, SolvedDesign]" = OrderedDict()
+        if path and os.path.exists(path):
+            self.load(path)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def __contains__(self, key: str) -> bool:
+        """Membership probe — does NOT touch LRU order or hit counters."""
+        with self._lock:
+            return key in self._entries
+
+    def get(self, key: str) -> Optional[SolvedDesign]:
+        with self._lock:
+            design = self._entries.get(key)
+            if design is not None:
+                self._entries.move_to_end(key)
+        if design is None:
+            _metrics.counter("service.cache.misses").inc()
+        else:
+            _metrics.counter("service.cache.hits").inc()
+        return design
+
+    def put(self, key: str, design: SolvedDesign) -> None:
+        with self._lock:
+            if key in self._entries:
+                self._entries.move_to_end(key)
+            self._entries[key] = design
+            _metrics.counter("service.cache.inserts").inc()
+            while len(self._entries) > self.capacity:
+                self._entries.popitem(last=False)
+                _metrics.counter("service.cache.evictions").inc()
+            _metrics.gauge("service.cache.size").set(len(self._entries))
+
+    # ------------------------------------------------------------------
+    # persistence
+    # ------------------------------------------------------------------
+    def save(self, path: Optional[str] = None) -> str:
+        path = path or self.path
+        if not path:
+            raise ValueError("no persistence path configured")
+        with self._lock:
+            items = list(self._entries.items())
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(path, "w", encoding="utf-8") as f:
+            for key, design in items:          # oldest-first = LRU order
+                f.write(json.dumps(design.to_json(key)) + "\n")
+        return path
+
+    def load(self, path: Optional[str] = None) -> int:
+        """Merge a JSONL file into the cache (newest lines win LRU
+        recency); returns the number of records read."""
+        path = path or self.path
+        if not path:
+            raise ValueError("no persistence path configured")
+        n = 0
+        with open(path, encoding="utf-8") as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                rec = json.loads(line)
+                self.put(rec["key"], SolvedDesign.from_json(rec))
+                n += 1
+        return n

@@ -504,3 +504,90 @@ def test_random_shard_devices_grid_identical(data):
                                            devices=D))):
             for r, g in zip(ref_list, got_list):
                 same(r, g)
+
+
+# ----------------------------------------------------------------------
+# service cache keying: key equality <=> identical lowered program
+# ----------------------------------------------------------------------
+
+@given(data=st.data())
+@settings(max_examples=6, deadline=None)
+def test_random_request_key_keying_properties(data):
+    """The service cache key contract (docs/service.md): equal keys iff
+    the canonical lowered program AND the search configuration agree.
+    Semantically identical re-submissions (fresh Problem objects) hit;
+    differing platforms, objectives, amortisation or search configs
+    never do. jax-free: the fingerprint hashes host-side lowering."""
+    import dataclasses as _dc
+
+    from repro.core.accel.lowering import problem_fingerprint
+    from repro.service.cache import request_key
+
+    prob = data.draw(problems())
+    kw = {"multi_start": True}
+
+    # identical re-submission -> identical fingerprint and key
+    assert problem_fingerprint(prob) == problem_fingerprint(_fresh(prob))
+    k = request_key(prob, "rule_based", "numpy", kw)
+    assert k == request_key(_fresh(prob), "rule_based", "numpy", kw)
+
+    # flipped objective -> different lowered program
+    flipped = Problem(graph=prob.graph, platform=prob.platform,
+                      backend=prob.backend,
+                      objective=("latency" if prob.objective == "throughput"
+                                 else "throughput"),
+                      exec_model=prob.exec_model, opts=prob.opts)
+    assert problem_fingerprint(flipped) != problem_fingerprint(prob)
+
+    # mutated platform (scalar and mesh) -> different lowered program
+    slower = _dc.replace(prob.platform, hbm_bw=prob.platform.hbm_bw / 2)
+    assert problem_fingerprint(
+        Problem(graph=prob.graph, platform=slower, backend=prob.backend,
+                objective=prob.objective, exec_model=prob.exec_model,
+                opts=prob.opts)) != problem_fingerprint(prob)
+
+    # different amortisation -> different Eq. 4 program
+    assert problem_fingerprint(
+        Problem(graph=prob.graph, platform=prob.platform,
+                backend=prob.backend, objective=prob.objective,
+                exec_model=prob.exec_model,
+                batch_amortisation=prob.batch_amortisation + 1,
+                opts=prob.opts)) != problem_fingerprint(prob)
+
+    # same program, different search config -> different request keys
+    assert request_key(prob, "annealing", "numpy", kw) != k
+    assert request_key(prob, "rule_based", "jax", kw) != k
+    assert request_key(prob, "rule_based", "numpy",
+                       {"multi_start": False}) != k
+    assert request_key(prob, "rule_based", "numpy", {}) != k
+
+
+def test_service_cache_eviction_refill_roundtrip(tmp_path):
+    """LRU eviction order + JSONL persistence round-trip: a reloaded
+    cache serves exactly the surviving entries, in the same LRU order."""
+    from repro.service.cache import SolvedCache, SolvedDesign
+
+    def design(i):
+        return SolvedDesign(cuts=(i % 3,), s_in=(1, i), s_out=(i, 2),
+                            kern=(1,), points=i * 7, seconds=0.125,
+                            history=((1, float(i)),), name="rule_based")
+
+    path = str(tmp_path / "solved.jsonl")
+    c = SolvedCache(capacity=4, path=path)
+    for i in range(6):                     # k0, k1 evicted
+        c.put(f"k{i}", design(i))
+    assert len(c) == 4
+    assert "k0" not in c and "k1" not in c
+    assert c.get("k2") is not None         # refresh k2 ...
+    c.put("k9", design(9))                 # ... so k3 is evicted, not k2
+    assert "k3" not in c and "k2" in c
+    c.save()
+
+    warm = SolvedCache(capacity=4, path=path)
+    assert len(warm) == 4
+    for key in ("k2", "k4", "k5", "k9"):
+        assert warm.get(key) == design(int(key[1:]))
+    # refill beyond capacity: newest entries win again after reload
+    for i in range(10, 13):
+        warm.put(f"k{i}", design(i))
+    assert len(warm) == 4 and "k12" in warm and "k4" not in warm

@@ -1,0 +1,355 @@
+"""Concurrency/property suite for mapping-as-a-service (repro/service).
+
+The contract under test: every response the server hands back is
+BIT-identical to a direct ``OPTIMIZERS[...](problem, engine=...)`` call
+for the same request — across threads, duplicate in-flight coalescing,
+cache hits, late joiners and deadline failures. The jax lockstep tests
+additionally pin the no-retrace contract with ``assert_max_traces``.
+
+Runs in both CI matrices: jax-engine tests skip cleanly when jax is
+absent; the cache, queue, backpressure, deadline, numpy-engine and HTTP
+tests run everywhere. All randomness is seeded (``random.Random(0)``) —
+the threaded tests are deterministic in the set of requests issued.
+"""
+import json
+import random
+import threading
+import time
+import urllib.request
+
+import pytest
+
+from repro.configs import get_arch, reduced
+from repro.configs.base import ShapeSpec
+from repro.core.accel import EngineUnavailable, jax_available
+from repro.core.optimizers import OPTIMIZERS
+from repro.core.pipeline import make_problem, optimise_portfolio
+from repro.core.platform import Platform
+from repro.obs import metrics
+from repro.service import (
+    AdmissionQueue,
+    DeadlineExceeded,
+    LockstepJob,
+    MappingServer,
+    ServiceClosed,
+    ServiceOverloaded,
+    SolvedCache,
+    SolvedDesign,
+    run_rule_based_lockstep,
+    serve_http,
+)
+
+needs_jax = pytest.mark.skipif(not jax_available(), reason="requires jax")
+
+PLATFORM = Platform(name="test-4x4", mesh_axes=(("data", 4), ("model", 4)))
+SHAPE = ShapeSpec("train_tiny", 256, 16, "train")
+
+
+def problem(objective="throughput", num_layers=None):
+    overrides = {} if num_layers is None else {"num_layers": num_layers}
+    arch = reduced(get_arch("tinyllama-1.1b"), **overrides)
+    return make_problem(arch, SHAPE, PLATFORM, "spmd", objective,
+                        "streaming")
+
+
+def same_result(a, b) -> bool:
+    """Bit-identity of two OptimResults (design, objective, accounting)."""
+    return (a.variables == b.variables
+            and a.evaluation.objective == b.evaluation.objective
+            and a.points == b.points
+            and list(a.history) == list(b.history))
+
+
+def counters():
+    return metrics.snapshot()["counters"]
+
+
+# ----------------------------------------------------------------------
+# cache unit tests (jax-free)
+# ----------------------------------------------------------------------
+
+def _design(i: int) -> SolvedDesign:
+    return SolvedDesign(cuts=(i % 2,), s_in=(1, i), s_out=(i, 1),
+                        kern=(1, 1), points=10 * i, seconds=0.25,
+                        history=((1, float(i)), (2, float(i) / 2)),
+                        name="rule_based")
+
+
+def test_cache_lru_eviction_and_counters():
+    c = SolvedCache(capacity=2)
+    c.put("a", _design(1))
+    c.put("b", _design(2))
+    assert c.get("a") is not None          # 'a' now most-recent
+    c.put("c", _design(3))                 # evicts 'b'
+    assert "b" not in c and "a" in c and "c" in c
+    assert c.get("b") is None
+    snap = counters()
+    assert snap["service.cache.evictions"] == 1
+    assert snap["service.cache.hits"] == 1
+    assert snap["service.cache.misses"] == 1
+
+
+def test_cache_contains_has_no_lru_side_effect():
+    c = SolvedCache(capacity=2)
+    c.put("a", _design(1))
+    c.put("b", _design(2))
+    assert "a" in c                        # probe must NOT refresh 'a'
+    c.put("c", _design(3))
+    assert "a" not in c and "b" in c
+    assert "service.cache.hits" not in counters()
+
+
+def test_cache_persistence_roundtrip(tmp_path):
+    path = str(tmp_path / "solved.jsonl")
+    c = SolvedCache(capacity=8, path=path)
+    for i in range(3):
+        c.put(f"k{i}", _design(i))
+    c.save()
+    warm = SolvedCache(capacity=8, path=path)   # auto-loads
+    assert len(warm) == 3
+    for i in range(3):
+        assert warm.get(f"k{i}") == _design(i)
+
+
+# ----------------------------------------------------------------------
+# admission queue + backpressure (jax-free)
+# ----------------------------------------------------------------------
+
+def test_admission_queue_fifo_and_backpressure():
+    q = AdmissionQueue(maxsize=2)
+    q.push(1)
+    q.push(2)
+    with pytest.raises(ServiceOverloaded):
+        q.push(3)
+    assert counters()["service.requests.rejected"] == 1
+    assert q.drain() == [1, 2]
+    for i in (1, 2):                       # refill after drain works
+        q.push(i * 10)
+    assert q.drain_matching(lambda x: x == 20) == [20]
+    assert q.drain() == [10]
+
+
+def test_server_backpressure_and_close():
+    srv = MappingServer(max_pending=2)     # never started: requests queue
+    f1 = srv.submit_problem(problem(), engine="numpy")
+    srv.submit_problem(problem(), engine="numpy")
+    with pytest.raises(ServiceOverloaded):
+        srv.submit_problem(problem(), engine="numpy")
+    srv.close(drain=False)                 # pending fail, new rejected
+    with pytest.raises(ServiceClosed):
+        f1.result(timeout=5)
+    with pytest.raises(ServiceClosed):
+        srv.submit_problem(problem(), engine="numpy")
+
+
+def test_unknown_optimiser_rejected_at_submit():
+    srv = MappingServer()
+    with pytest.raises(ValueError, match="unknown optimiser"):
+        srv.submit_problem(problem(), optimiser="gradient_descent")
+    srv.close()
+
+
+# ----------------------------------------------------------------------
+# end-to-end on the host engine (both CI matrices)
+# ----------------------------------------------------------------------
+
+def test_numpy_engine_end_to_end_bit_identical():
+    direct = OPTIMIZERS["rule_based"](problem(), engine="numpy")
+    with MappingServer() as srv:
+        resp = srv.submit_problem(problem(), optimiser="rule_based",
+                                  engine="numpy").result(timeout=300)
+    assert resp.engine == "numpy" and not resp.cached
+    assert same_result(resp.result, direct)
+    assert resp.plan.objective_value == direct.evaluation.objective
+
+
+def test_engine_unavailable_fails_fast(monkeypatch):
+    monkeypatch.setenv("REPRO_NO_JAX", "1")
+    with MappingServer() as srv:
+        fut = srv.submit_problem(problem(), engine="jax")
+        with pytest.raises(EngineUnavailable):
+            fut.result(timeout=30)         # clean failure, never a hang
+
+
+def test_deadline_expired_fails_cleanly_without_poisoning():
+    srv = MappingServer()                  # paused: stage both requests
+    doomed = srv.submit_problem(problem("latency"), engine="numpy",
+                                deadline_s=0.0)
+    ok = srv.submit_problem(problem(), engine="numpy")
+    time.sleep(0.05)
+    srv.start()
+    resp = ok.result(timeout=300)          # healthy request unaffected
+    with pytest.raises(DeadlineExceeded):
+        doomed.result(timeout=5)
+    srv.close()
+    direct = OPTIMIZERS["rule_based"](problem(), engine="numpy")
+    assert same_result(resp.result, direct)
+    assert counters()["service.requests.expired"] == 1
+
+
+def test_portfolio_dedupe_coalesces_identical_problems():
+    arch = reduced(get_arch("tinyllama-1.1b"))
+    arch_b = reduced(get_arch("tinyllama-1.1b"), num_layers=2)
+    plans = optimise_portfolio([arch, arch, arch_b], SHAPE, PLATFORM,
+                               optimiser="rule_based", engine="numpy",
+                               objective="throughput")
+    assert counters()["pipeline.portfolio.coalesced"] == 1
+    a, b, c = plans
+    assert a.objective_value == b.objective_value
+    assert a.partitions == b.partitions
+    assert len(plans) == 3 and c.arch_name == arch_b.name
+
+
+def test_http_adapter_round_trip():
+    with MappingServer() as srv:
+        httpd = serve_http(srv, port=0)    # ephemeral port
+        port = httpd.server_address[1]
+        t = threading.Thread(target=httpd.serve_forever, daemon=True)
+        t.start()
+        try:
+            base = f"http://127.0.0.1:{port}"
+            with urllib.request.urlopen(f"{base}/healthz", timeout=10) as r:
+                assert json.load(r) == {"ok": True}
+            body = json.dumps({
+                "arch": "tinyllama-1.1b", "reduced": True,
+                "shape": {"name": "train_tiny", "seq_len": 256,
+                          "global_batch": 16, "mode": "train"},
+                "platform": {"name": "test-4x4",
+                             "mesh_axes": [["data", 4], ["model", 4]]},
+                "optimiser": "rule_based", "engine": "numpy",
+                "objective": "throughput",
+            }).encode()
+            req = urllib.request.Request(f"{base}/v1/mapping", data=body,
+                                         headers={"Content-Type":
+                                                  "application/json"})
+            with urllib.request.urlopen(req, timeout=300) as r:
+                out = json.load(r)
+            direct = OPTIMIZERS["rule_based"](problem(), engine="numpy")
+            assert out["engine"] == "numpy"
+            assert out["objective_value"] == direct.evaluation.objective
+            assert out["points"] == direct.points
+            bad = urllib.request.Request(f"{base}/v1/mapping",
+                                         data=b'{"arch": "no-such-arch"}')
+            with pytest.raises(urllib.error.HTTPError) as ei:
+                urllib.request.urlopen(bad, timeout=10)
+            assert ei.value.code == 400
+            with urllib.request.urlopen(f"{base}/metricsz",
+                                        timeout=10) as r:
+                snap = json.load(r)
+            assert snap["counters"]["service.requests.completed"] >= 1
+        finally:
+            httpd.shutdown()
+            httpd.server_close()
+
+
+# ----------------------------------------------------------------------
+# jax lockstep: concurrency, coalescing, late joiners
+# ----------------------------------------------------------------------
+
+@needs_jax
+def test_threaded_submissions_bit_identical_to_serial():
+    direct = {obj: OPTIMIZERS["rule_based"](problem(obj), engine="jax")
+              for obj in ("throughput", "latency")}
+    results = {}
+    res_lock = threading.Lock()
+    with MappingServer() as srv:
+        def worker(tid):
+            rng = random.Random(tid)       # seeded per thread: no flake
+            for i in range(3):
+                obj = rng.choice(("throughput", "latency"))
+                resp = srv.submit_problem(
+                    problem(obj), optimiser="rule_based",
+                    engine="jax").result(timeout=600)
+                with res_lock:
+                    results[(tid, i)] = (obj, resp)
+        threads = [threading.Thread(target=worker, args=(t,))
+                   for t in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    assert len(results) == 24
+    for obj, resp in results.values():
+        assert same_result(resp.result, direct[obj]), \
+            f"threaded {obj} response differs from serial engine run"
+
+
+@needs_jax
+def test_duplicate_inflight_requests_coalesce_to_one_run(
+        assert_max_traces):
+    # warm the lockstep executable with a different-objective problem:
+    # the objective is device data, so the trace shapes are identical
+    with MappingServer() as warm:
+        warm.submit_problem(problem("latency"),
+                            engine="jax").result(timeout=600)
+    metrics.reset()
+    srv = MappingServer()                  # paused: stage 4 duplicates
+    futs = [srv.submit_problem(problem("throughput"), engine="jax")
+            for _ in range(4)]
+    with assert_max_traces(0, keys=("fleet_rb_descend",)):
+        srv.start()
+        resps = [f.result(timeout=600) for f in futs]
+    srv.close()
+    snap = counters()
+    assert snap["service.engine_runs"] == 1, \
+        "4 identical in-flight requests must share one engine run"
+    assert snap["service.requests.coalesced"] == 3
+    direct = OPTIMIZERS["rule_based"](problem("throughput"), engine="jax")
+    for r in resps:
+        assert same_result(r.result, direct)
+    assert sum(r.coalesced for r in resps) == 3
+
+
+@needs_jax
+def test_cache_hit_bit_identical_on_resubmission():
+    with MappingServer() as srv:
+        first = srv.submit_problem(problem(), engine="jax").result(600)
+        again = srv.submit_problem(problem(), engine="jax").result(600)
+    assert not first.cached and again.cached
+    assert same_result(first.result, again.result)
+    assert counters()["service.cache.hits"] == 1
+
+
+@needs_jax
+def test_deadline_expiry_does_not_poison_lockstep_round():
+    srv = MappingServer()
+    doomed = srv.submit_problem(problem("latency"), engine="jax",
+                                deadline_s=0.0)
+    ok = srv.submit_problem(problem(), engine="jax")
+    time.sleep(0.05)
+    srv.start()
+    resp = ok.result(timeout=600)
+    with pytest.raises(DeadlineExceeded):
+        doomed.result(timeout=5)
+    srv.close()
+    direct = OPTIMIZERS["rule_based"](problem(), engine="jax")
+    assert same_result(resp.result, direct)
+
+
+@needs_jax
+def test_lockstep_late_joiner_and_restack():
+    """A job admitted mid-flight (bigger graph: forces pad growth and a
+    restack) must still produce bit-identical results for everyone."""
+    from repro.core.accel.fleet import _node_tier
+
+    p1, p2 = problem("throughput"), problem("latency", num_layers=6)
+    calls = [0]
+
+    def poll():
+        calls[0] += 1
+        return [LockstepJob(p2, tag="late")] if calls[0] == 3 else []
+
+    done = run_rule_based_lockstep([LockstepJob(p1, tag="first")],
+                                   poll=poll)
+    results = {job.tag: res for job, res in done}
+    assert set(results) == {"first", "late"}
+    d1 = OPTIMIZERS["rule_based"](problem("throughput"), engine="jax")
+    d2 = OPTIMIZERS["rule_based"](problem("latency", num_layers=6),
+                                  engine="jax")
+    assert same_result(results["first"], d1)
+    assert same_result(results["late"], d2)
+    snap = counters()
+    assert snap["service.rounds"] > 0
+    if (_node_tier(len(p2.graph.nodes))
+            > _node_tier(len(p1.graph.nodes))):
+        assert snap["service.rounds.restacks"] >= 1

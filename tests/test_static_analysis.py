@@ -177,6 +177,28 @@ def test_ast_pack_catches_planted_file_in_checkout(tmp_path):
     assert keys == ["ast/eager-jax-import::src/repro/core/planted.py"]
 
 
+def test_service_package_in_no_jax_matrix():
+    """The mapping service must import (and serve host-engine requests)
+    without jax, so an eager jax import there is a lint violation."""
+    assert "repro/service/" in ast_rules.NO_JAX_PREFIXES
+    vs = ast_rules.check_eager_jax_import(_tree("import jax"),
+                                          "repro/service/planted.py")
+    assert [v.rule for v in vs] == ["ast/eager-jax-import"]
+
+
+def test_service_package_scanned_for_unseeded_random(tmp_path):
+    """``run`` covers repro/service with the seeded-randomness rule: the
+    deterministic threaded service tests must not depend on draws from
+    global random state anywhere in the serving stack."""
+    mod = tmp_path / "src" / "repro" / "service"
+    mod.mkdir(parents=True)
+    (mod / "planted.py").write_text(
+        "import random\nrandom.shuffle([1, 2])\n")
+    out = ast_rules.run(str(tmp_path))
+    keys = [v.key for v in out["ast/unseeded-random"]]
+    assert keys == ["ast/unseeded-random::src/repro/service/planted.py"]
+
+
 # ----------------------------------------------------------------------
 # recompile lint
 # ----------------------------------------------------------------------

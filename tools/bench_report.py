@@ -73,6 +73,13 @@ def bench_row(record: Dict[str, Any]) -> Dict[str, Any]:
         "traces": section("accel.traces."),
         "span_totals_s": runrecord.span_totals(record),
         "spans_dropped": record["spans_dropped"],
+        # mapping-as-a-service SLOs (serve lane): requests/s, latency
+        # percentiles, cache hit rate plus the raw service.* counters
+        "service": {
+            "counters": section("service."),
+            "gauges": {k[len("service."):]: v for k, v in g.items()
+                       if k.startswith("service.")},
+        },
         "config": record["config"],
     }
 
