@@ -1,0 +1,117 @@
+"""Comap lane: multi-network co-mapping (f-CNNx scenario).
+
+Three phases (docs/comapping.md documents the model):
+
+  identity gate    with jax available, the jax joint search must return
+                   the IDENTICAL split, per-net designs, composite
+                   objective and improvement history as the float64
+                   scalar reference — the fleet-stacked device program
+                   is an accelerator, never a different optimiser. The
+                   gate runs before any comparison number is recorded.
+  joint vs indep   the headline comparison: joint co-mapping (the full
+                   resource-split menu in the decision space) against
+                   the independent baseline that pins the conventional
+                   even split and only optimises per-net designs — the
+                   SAME total chip budget, so any gap is pure split
+                   choice. The menu contains the even split, hence
+                   joint <= independent by construction; the BENCH row
+                   quotes both objectives and the improvement
+                   (``comap.*`` gauges).
+  infeasible edge  a co-mapping with more nets than leading-axis slices
+                   must come back feasible=False with an explanatory
+                   violation, not raise.
+
+Runs host-only without jax (the identity gate then checks scalar vs
+numpy instead). ``--smoke`` shrinks to two networks for CI (<60 s).
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import Reporter, SMALL_SHAPE, zoo_arch
+from repro.core.accel import jax_available
+from repro.core.comap import joint_search
+from repro.core.pipeline import make_comap_problem, optimise_comapping
+from repro.core.platform import Platform
+from repro.obs import metrics
+
+SMOKE_NETS = ("TFC", "3-layer")
+FULL_NETS = ("TFC", "LeNet", "3-layer")
+PLATFORM = Platform(name="bench-4x4",
+                    mesh_axes=(("data", 4), ("model", 4)))
+
+
+def _even_split(size0: int, n: int):
+    """The conventional static partition: equal shares, remainder to the
+    last net — the baseline a joint search has to beat."""
+    base, rem = divmod(size0, n)
+    return tuple([base] * (n - 1) + [base + rem])
+
+
+def run(smoke: bool = False) -> None:
+    t0 = time.time()
+    nets = SMOKE_NETS if smoke else FULL_NETS
+    archs = [zoo_arch(n) for n in nets]
+    rep = Reporter("comap")
+
+    def fresh(**kw):
+        return make_comap_problem(archs, SMALL_SHAPE, PLATFORM, **kw)
+
+    # ---- identity gate: device joint search == scalar reference ------
+    ref = joint_search(fresh(), optimiser="rule_based", engine="scalar")
+    other_eng = "jax" if jax_available() else "numpy"
+    got = joint_search(fresh(), optimiser="rule_based", engine=other_eng)
+    assert (got.split == ref.split
+            and got.evaluation.objective == ref.evaluation.objective
+            and got.history == ref.history
+            and [r.variables for r in got.per_net]
+            == [r.variables for r in ref.per_net]), \
+        f"{other_eng} joint search differs from the scalar reference"
+    print(f"[comap] identity gate: {other_eng} joint search bit-identical "
+          f"to scalar over {len(ref.problem.resolved_splits())} splits x "
+          f"{len(nets)} nets")
+
+    # ---- joint vs independent under the same total budget ------------
+    engine = "jax" if jax_available() else "numpy"
+    joint = optimise_comapping(archs, SMALL_SHAPE, PLATFORM,
+                               optimiser="rule_based", engine=engine)
+    even = _even_split(PLATFORM.mesh_axes[0][1], len(nets))
+    indep = optimise_comapping(archs, SMALL_SHAPE, PLATFORM,
+                               optimiser="rule_based", engine=engine,
+                               splits=[even])
+    assert joint.feasible and indep.feasible
+    assert joint.objective_value <= indep.objective_value, \
+        "joint search worse than a baseline its menu contains"
+    improvement = (indep.objective_value - joint.objective_value) \
+        / abs(indep.objective_value) * 100.0
+
+    metrics.gauge("comap.joint_objective").set(joint.objective_value)
+    metrics.gauge("comap.indep_objective").set(indep.objective_value)
+    metrics.gauge("comap.improvement_pct").set(improvement)
+    metrics.gauge("comap.nets").set(len(nets))
+    metrics.gauge("comap.splits").set(
+        len(joint.result.problem.resolved_splits()))
+
+    for i, (name, plan) in enumerate(zip(nets, joint.plans)):
+        rep.add(net=name, chips=plan.platform.chips,
+                even_chips=indep.plans[i].platform.chips,
+                throughput=round(plan.throughput, 2),
+                even_throughput=round(indep.plans[i].throughput, 2))
+    rep.print_table(f"joint split {joint.split} vs even {even}: "
+                    f"{improvement:.1f}% composite improvement")
+    rep.save()
+    print(f"[comap] joint {joint.objective_value:.4g} "
+          f"(split {joint.split}) vs independent "
+          f"{indep.objective_value:.4g} (split {even}): "
+          f"{improvement:.1f}% better, {joint.result.points} points")
+
+    # ---- infeasible edge: more nets than leading-axis slices ---------
+    crowded = make_comap_problem(archs * 3, SMALL_SHAPE, PLATFORM)
+    r_inf = joint_search(crowded, optimiser="rule_based", engine=engine)
+    assert r_inf.split_index == -1 and not r_inf.evaluation.feasible
+    assert r_inf.evaluation.violations, \
+        "infeasible co-mapping must explain itself"
+
+    wall = time.time() - t0
+    if smoke:
+        assert wall < 60, f"comap smoke took {wall:.0f}s (budget 60s)"

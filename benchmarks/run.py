@@ -36,6 +36,7 @@ runtime_config.apply_env()
 from repro.obs import metrics, runrecord, trace  # noqa: E402
 
 from benchmarks import (  # noqa: E402
+    comap_bench,
     fig2_optimizer_compare,
     fig4_batch_partitions,
     fleet_sweep,
@@ -68,14 +69,15 @@ ALL = {
     "fleet": fleet_sweep.run,
     "shard": shard_sweep.run,
     "serve": serve_bench.run,
+    "comap": comap_bench.run,
     "tests": run_tests,
 }
 
 #: lanes that run only when asked for explicitly
-_ON_DEMAND = ("tests", "accel", "fleet", "shard", "serve")
+_ON_DEMAND = ("tests", "accel", "fleet", "shard", "serve", "comap")
 
 #: lanes accepting the ``--smoke`` flag
-_SMOKEABLE = ("accel", "fleet", "shard", "serve")
+_SMOKEABLE = ("accel", "fleet", "shard", "serve", "comap")
 
 
 def _bench_report():

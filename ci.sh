@@ -84,6 +84,18 @@ if python -c "from repro.core.accel import jax_available as j; raise SystemExit(
     test -s "$SERVE_OUT/BENCH_serve.json"
     rm -rf "$SERVE_OUT"
     echo "ci.sh: serve smoke OK (served results bit-identical + BENCH row valid)"
+
+    # The comap smoke step: multi-network co-mapping (docs/comapping.md).
+    # The lane gates jax==scalar joint-search identity (split, designs,
+    # composite, history), then compares the joint resource-split search
+    # against the independent even-split baseline under the same total
+    # chip budget, plus the under-provisioned infeasible edge.
+    COMAP_OUT="$(mktemp -d)"
+    BENCH_OUT="$COMAP_OUT" python -m benchmarks.run comap --smoke
+    python tools/bench_report.py validate "$COMAP_OUT/runrecords.jsonl" --lane comap
+    test -s "$COMAP_OUT/BENCH_comap.json"
+    rm -rf "$COMAP_OUT"
+    echo "ci.sh: comap smoke OK (joint-search identity + BENCH row valid)"
 else
     echo "ci.sh: obs smoke skipped (jax unavailable; record layer covered by tests/test_obs.py)"
     echo "ci.sh: shard smoke skipped (jax unavailable)"
@@ -91,4 +103,12 @@ else
     # explicit jax request must fail fast with EngineUnavailable, not hang
     python -m benchmarks.run serve --smoke
     echo "ci.sh: serve no-jax gate OK (EngineUnavailable surfaced, no hang)"
+    # the comap lane is host-complete: its identity gate degrades to
+    # scalar==numpy and the joint-vs-independent comparison still runs
+    COMAP_OUT="$(mktemp -d)"
+    BENCH_OUT="$COMAP_OUT" python -m benchmarks.run comap --smoke
+    python tools/bench_report.py validate "$COMAP_OUT/runrecords.jsonl" --lane comap
+    test -s "$COMAP_OUT/BENCH_comap.json"
+    rm -rf "$COMAP_OUT"
+    echo "ci.sh: comap no-jax smoke OK (scalar==numpy joint identity)"
 fi

@@ -1,0 +1,56 @@
+"""Device lowering for the co-mapping joint search (docs/comapping.md).
+
+The joint space of a ``CoMapProblem`` is S x N lanes — one per-net
+sub-problem for every resource split in the menu. This module hands ALL
+of them to the fleet machinery in one call, which buckets lanes by trace
+signature, pads each bucket bit-neutrally (no-op tail candidates) and
+compiles ONE vmapped XLA executable per bucket: the nets of every split
+are stacked into a single padded device program, so brute-force chunk
+decode, device SA and the rule-based greedy descents each search the
+whole joint space on-device instead of lane by lane.
+
+Because fleet results are bit-identical to per-problem jax loops (the
+``fleet.py`` contract) and the split/net combine is shared float64 host
+arithmetic in ``core/comap.py``, the jax joint search returns the same
+split, per-net designs, composite objective and history as the scalar
+reference — the coupled chip-budget constraint is applied to every
+candidate split in that same combine, via
+``CoMapProblem.budget_violations``.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+from repro.core.accel.fleet import (
+    fleet_annealing,
+    fleet_brute_force,
+    fleet_rule_based,
+)
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
+
+__all__ = ["fleet_comap"]
+
+_FLEETS = {
+    "brute_force": fleet_brute_force,
+    "annealing": fleet_annealing,
+    "rule_based": fleet_rule_based,
+}
+
+
+def fleet_comap(lanes: Sequence, optimiser: str, **kw) -> List:
+    """Run every (split, net) lane through one fleet invocation.
+
+    ``lanes`` is the flat split-major list built by
+    ``comap.joint_search``; the returned list preserves its order, so
+    the host combine can slice lane blocks per split. Raises
+    ``KeyError`` for optimisers without a fleet entry point — the
+    caller's kwargs gate makes that unreachable in practice.
+    """
+    fleet = _FLEETS[optimiser]
+    with _trace.span("comap.fleet", optimiser=optimiser,
+                     lanes=len(lanes)):
+        results = fleet(list(lanes), **kw)
+    for r in results:
+        _metrics.note_result(r, engine="fleet")
+    return results

@@ -108,7 +108,8 @@ def _collective_bytes(static: StaticSpec, A: DeviceArrays,
                   2.0 * tokens_shard * (fanout * fmf)[None, :] * BF16
                   * _frac(sof) * train_mult)
 
-    total = _madd(total, A.m_vocab, 2.0 * _frac(sof) * fm_shard)
+    total = _madd(total, A.m_vocab,
+                  2.0 * _frac(sof) * fm_shard * train_mult)
 
     if static.decode:
         vhead = (colsf * batchf)[None, :] * BF16 / kkf * _frac(sof)

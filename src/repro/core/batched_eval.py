@@ -515,7 +515,7 @@ class BatchedEvaluator:
                              * BF16 * frac(sof[:, ix]) * train_mult)
         if len(self.i_vocab):
             ix = self.i_vocab
-            total[:, ix] += 2.0 * frac(sof[:, ix]) * fm_shard(ix)
+            total[:, ix] += 2.0 * frac(sof[:, ix]) * fm_shard(ix) * train_mult
         if len(self.i_vhead):
             ix = self.i_vhead
             if mode == "decode":
@@ -559,3 +559,133 @@ class BatchedEvaluator:
             grad = self.weight_bytes / sof * 2.0 * opts.grad_compression
             total += 2.0 * frac(kkf) * grad
         return total
+
+
+# ----------------------------------------------------------------------
+# Multi-network co-mapping mirror (docs/comapping.md)
+# ----------------------------------------------------------------------
+
+@dataclass
+class CoMapBatchResult:
+    """Vectorised analogue of ``objectives.CoMapEvaluation`` for N joint
+    candidates under ONE split."""
+
+    objective: np.ndarray            # [N] composite, lower is better
+    feasible: np.ndarray             # [N] bool (budget mask applied)
+    budget_ok: bool                  # the split's shared-budget mask bit
+    per_net: List[BatchResult]       # one BatchResult per net
+
+    def __len__(self) -> int:
+        return int(self.objective.shape[0])
+
+
+class CoMapBatchedEvaluator:
+    """Vectorised host mirror of ``CoMapProblem.evaluate``.
+
+    The N nets' node arrays conceptually concatenate along one node axis
+    — ``seg_ids``/``offsets`` map positions to nets, which is how joint
+    fold/cut vectors address the combined graph — and every net's slice
+    of a joint candidate evaluates through that net's per-sub-problem
+    array program. The shared chip budget enters as an explicit per-split
+    constraint mask (``budget_mask``) applied INSIDE the candidate:
+    a candidate on an over-budget split is infeasible no matter how good
+    its per-net designs are. The composite combine is the same float64
+    host arithmetic as the scalar reference (``combine_composite``), so
+    per-net agreement at 1e-9 implies joint agreement at 1e-9.
+    """
+
+    def __init__(self, cp) -> None:
+        self.cp = cp
+        counts = [len(g.nodes) for g in cp.graphs]
+        #: net index of every position on the concatenated node axis
+        self.seg_ids = np.repeat(np.arange(len(counts)), counts)
+        #: net i's nodes live at [offsets[i], offsets[i+1])
+        self.offsets = np.concatenate(([0], np.cumsum(counts)))
+        self.n_nodes = int(self.offsets[-1])
+        self._bevs: Dict[Tuple[int, int], BatchedEvaluator] = {}
+
+    def evaluator(self, split_index: int, net: int) -> BatchedEvaluator:
+        """The (split, net) sub-problem's array program (memoised)."""
+        key = (split_index, net)
+        bev = self._bevs.get(key)
+        if bev is None:
+            bev = self.cp.subproblem(split_index, net).batched()
+            self._bevs[key] = bev
+        return bev
+
+    def budget_mask(self) -> np.ndarray:
+        """[S] bool: splits whose per-net chip allocations fit the shared
+        budget. True for the whole generated menu by construction;
+        user-supplied menus may carry False entries."""
+        return np.array(
+            [not self.cp.budget_violations(s)
+             for s in range(len(self.cp.resolved_splits()))], bool)
+
+    def split_variables(self, joint: "Variables") -> List[Variables]:
+        """Slice ONE joint design (folds/cuts over the concatenated node
+        axis; cut indices on the joint edge numbering) back into per-net
+        ``Variables`` — the segment-id decode of a joint candidate."""
+        if len(joint.s_in) != self.n_nodes:
+            raise ValueError(f"joint design has {len(joint.s_in)} fold "
+                             f"entries for a {self.n_nodes}-node axis")
+        out = []
+        for i in range(len(self.cp.graphs)):
+            lo, hi = int(self.offsets[i]), int(self.offsets[i + 1])
+            cuts = tuple(c - lo for c in joint.cuts
+                         if lo <= c < hi - 1)
+            out.append(Variables(cuts, joint.s_in[lo:hi],
+                                 joint.s_out[lo:hi], joint.kern[lo:hi]))
+        return out
+
+    def join_variables(self, per_net: Sequence[Variables]) -> Variables:
+        """Inverse of ``split_variables``: concatenate per-net designs
+        onto the joint node axis (boundary edges between nets carry no
+        cut — partitions never span nets)."""
+        cuts, si, so, kk = [], [], [], []
+        for i, v in enumerate(per_net):
+            lo = int(self.offsets[i])
+            cuts.extend(lo + c for c in v.cuts)
+            si.extend(v.s_in)
+            so.extend(v.s_out)
+            kk.extend(v.kern)
+        return Variables(tuple(cuts), tuple(si), tuple(so), tuple(kk))
+
+    def evaluate_batch(self, split_index: int,
+                       designs: Sequence[Sequence["Variables"]]
+                       ) -> CoMapBatchResult:
+        """Evaluate B joint candidates under one split.
+
+        ``designs`` is a B-long sequence of N-long per-net design rows
+        (use ``split_variables`` first for candidates expressed on the
+        joint node axis). Returns float64 composites identical to the
+        scalar reference at 1e-9.
+        """
+        cp = self.cp
+        N = cp.n_nets
+        rows = [tuple(row) for row in designs]
+        if any(len(r) != N for r in rows):
+            raise ValueError(f"every design row must carry {N} per-net "
+                             f"designs")
+        budget_ok = not cp.budget_violations(split_index)
+        per_net: List[BatchResult] = []
+        for i in range(N):
+            bev = self.evaluator(split_index, i)
+            res = bev.evaluate_batch(*bev.pack([r[i] for r in rows]))
+            cp.subproblem(split_index, i).note_batch_evals(len(res))
+            per_net.append(res)
+        B = len(rows)
+        weights = cp.net_weights
+        feas = np.full(B, budget_ok, bool)
+        for res in per_net:
+            feas &= res.feasible.astype(bool)
+        if cp.objective == "worst_latency":
+            comp = np.max(np.stack([r.latency for r in per_net]), axis=0)
+        else:
+            thr = np.stack([w * r.throughput
+                            for w, r in zip(weights, per_net)])
+            comp = (-np.min(thr, axis=0)
+                    if cp.objective == "maxmin_throughput"
+                    else -np.sum(thr, axis=0))
+        return CoMapBatchResult(objective=comp.astype(np.float64),
+                                feasible=feas, budget_ok=budget_ok,
+                                per_net=per_net)

@@ -61,7 +61,10 @@ def check_channel_factor(graph: HDGraph, v: Variables, platform: Platform,
     """Eq. 8 + TPU mesh-realisability + layer-aligned cuts."""
     allowed = set(graph.cut_edges)
     for c in v.cuts:
-        if c not in allowed:
+        if not (0 <= c < len(graph.nodes) - 1):
+            rep.add(f"cut {c} out of range for "
+                    f"{len(graph.nodes)}-node graph")
+        elif c not in allowed:
             rep.add(f"cut {c} not on a layer boundary")
     for i, n in enumerate(graph.nodes):
         si, so, k = v.s_in[i], v.s_out[i], v.kern[i]

@@ -106,7 +106,14 @@ def partitions_from_cuts(graph: HDGraph, cuts: Sequence[int]) -> List[List[int]]
     sorted sequence of edge indices in [0, N-2]; |C|=0 returns the whole graph.
     """
     n = len(graph.nodes)
-    cuts = sorted(set(cuts))
+    cuts = list(cuts)
+    if len(set(cuts)) != len(cuts):
+        # a duplicate cut is always a caller bug (it would silently
+        # collapse into one cut and mis-count |C| in Eq. 3) — refuse it
+        # instead of deduplicating; ``Variables.with_cuts`` is the
+        # canonicalising entry point for callers with raw cut sets
+        raise ValueError(f"duplicate cut indices in {tuple(cuts)}")
+    cuts = sorted(cuts)
     for c in cuts:
         if not (0 <= c < n - 1):
             raise ValueError(f"cut {c} out of range for {n}-node graph")
@@ -141,6 +148,25 @@ class Variables:
     s_in: Tuple[int, ...]
     s_out: Tuple[int, ...]
     kern: Tuple[int, ...]
+
+    def __post_init__(self):
+        # Degenerate cut vectors (duplicates, unsorted, negative) used to
+        # pass silently into ``partitions_from_cuts`` and corrupt the
+        # |C| accounting; reject them at construction with a clear error.
+        # Range against the graph length is checked where a graph is in
+        # scope (``check_channel_factor`` / ``partitions_from_cuts``).
+        for a, b in zip(self.cuts, self.cuts[1:]):
+            if a >= b:
+                raise ValueError(
+                    f"cuts must be strictly increasing, got {self.cuts} "
+                    f"(use with_cuts() to canonicalise a raw cut set)")
+        if self.cuts and self.cuts[0] < 0:
+            raise ValueError(f"negative cut index in {self.cuts}")
+        if not (len(self.s_in) == len(self.s_out) == len(self.kern)):
+            raise ValueError(
+                f"fold vectors must have equal length, got "
+                f"|s_in|={len(self.s_in)} |s_out|={len(self.s_out)} "
+                f"|kern|={len(self.kern)}")
 
     def replace_node(self, i: int, s_in=None, s_out=None, kern=None) -> "Variables":
         si, so, kk = list(self.s_in), list(self.s_out), list(self.kern)

@@ -335,7 +335,18 @@ def _algorithm2(problem: Problem,
                     continue
                 if best_obj is None or ev2.objective < best_obj:
                     merged, best_obj = v2, ev2.objective
-            if merged is None or best_obj > baseline.objective:
+            # A tie only counts as a merge if the cut actually stayed
+            # removed: repair may split the partition straight back
+            # (re-adding a cut), and accepting that no-op candidate at
+            # equal objective re-attempts the identical merge forever.
+            # The livelock needs a repair-driven split to trigger, which
+            # none of the power-of-two platforms do — the 3-wide
+            # sub-meshes co-mapping carves (docs/comapping.md) found it.
+            # Strict improvements are always kept, so any run that
+            # terminated before is unchanged.
+            if merged is None or best_obj > baseline.objective or (
+                    best_obj >= baseline.objective
+                    and len(merged.cuts) >= len(v.cuts)):
                 pi += 1
                 continue
             v = merged

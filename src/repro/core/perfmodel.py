@@ -174,7 +174,10 @@ def _collective_bytes(node: Node, s_in: int, s_out: int, kern: int,
             total += (2.0 * tokens_shard * fanout * D * BF16
                       * (s_out - 1) / s_out * train_mult)
         elif node.collective_kind == "vocab_allreduce":
-            total += 2.0 * (s_out - 1) / s_out * fm_shard
+            # the backward pass re-runs this all-reduce exactly like
+            # tp_allreduce above — the two must stay consistent (the
+            # batched and jax evaluators mirror this line verbatim)
+            total += 2.0 * (s_out - 1) / s_out * fm_shard * train_mult
         elif node.collective_kind == "vocab_head":
             if mode == "decode":
                 # all-gather sharded logits for sampling

@@ -222,17 +222,31 @@ def optimise_portfolio(archs: Sequence, shapes,
     alias_of: dict = {}
     unique_idx = list(range(len(problems)))
     if len(problems) > 1 and "time_budget_s" not in optimiser_kwargs:
-        from repro.core.accel.lowering import problem_fingerprint
-        with _trace.span("pipeline.dedupe", problems=len(problems)):
-            first_at: dict = {}
-            unique_idx = []
-            for i, p in enumerate(problems):
-                fp = problem_fingerprint(p)
-                if fp in first_at:
-                    alias_of[i] = first_at[fp]
-                else:
-                    first_at[fp] = i
-                    unique_idx.append(i)
+        # ``problem_fingerprint`` is deliberately jax-free (it hashes the
+        # host-side lowering), so this import works under REPRO_NO_JAX —
+        # tests/test_pipeline_engines.py pins the no-jax duplicates path.
+        # Dedupe is an optimisation, never a correctness requirement:
+        # if fingerprinting is unavailable for any reason, warn and fall
+        # back to per-problem runs rather than failing the portfolio.
+        try:
+            from repro.core.accel.lowering import problem_fingerprint
+            with _trace.span("pipeline.dedupe", problems=len(problems)):
+                first_at: dict = {}
+                unique_idx = []
+                for i, p in enumerate(problems):
+                    fp = problem_fingerprint(p)
+                    if fp in first_at:
+                        alias_of[i] = first_at[fp]
+                    else:
+                        first_at[fp] = i
+                        unique_idx.append(i)
+        except Exception as e:
+            import warnings
+            warnings.warn(f"portfolio dedupe unavailable "
+                          f"(problem_fingerprint failed: {e}); running "
+                          f"every problem individually", RuntimeWarning)
+            alias_of = {}
+            unique_idx = list(range(len(problems)))
         if alias_of:
             _metrics.counter("pipeline.portfolio.coalesced").inc(
                 len(alias_of))
@@ -296,6 +310,98 @@ def optimise_portfolio(archs: Sequence, shapes,
         return [export_plan(p.graph, r.variables, p.platform, exec_model,
                             r.evaluation)
                 for p, r in zip(problems, all_results)]
+
+
+def make_comap_problem(archs: Sequence, shape: ShapeSpec,
+                       platform: Platform = V5E_POD,
+                       backend: str = "spmd",
+                       objective: str = "weighted_throughput",
+                       weights: Optional[Sequence[float]] = None,
+                       exec_model: str = "streaming",
+                       opts: Optional[ModelOptions] = None,
+                       splits: Optional[Sequence[Sequence[int]]] = None):
+    """Build a ``CoMapProblem``: N architectures sharing ONE platform,
+    the chip/HBM partition between them part of the decision space
+    (docs/comapping.md). ``archs`` are ArchConfigs or registry names;
+    ``objective`` is a composite name from ``COMAP_OBJECTIVES``;
+    ``splits`` optionally pins an explicit resource-split menu instead
+    of the full axis-0 composition enumeration."""
+    from repro.configs import get_arch
+    from repro.core.objectives import CoMapProblem
+
+    if isinstance(archs, str):
+        raise ValueError(
+            f"archs must be a sequence of ArchConfigs or registry names; "
+            f"got the single string {archs!r} — wrap it in a list")
+    archs = [get_arch(a) if isinstance(a, str) else a for a in archs]
+    graphs = tuple(build_hdgraph(a, shape) for a in archs)
+    return CoMapProblem(
+        graphs=graphs,
+        platform=platform,
+        backend=BACKENDS[backend],
+        objective=objective,
+        weights=None if weights is None else tuple(weights),
+        exec_model=exec_model,
+        opts=opts or ModelOptions(),
+        splits=None if splits is None
+        else tuple(tuple(int(p) for p in s) for s in splits),
+    )
+
+
+def optimise_comapping(archs: Sequence, shape: ShapeSpec,
+                       platform: Platform = V5E_POD,
+                       backend: str = "spmd",
+                       optimiser: str = "rule_based",
+                       objective: str = "weighted_throughput",
+                       weights: Optional[Sequence[float]] = None,
+                       exec_model: str = "streaming",
+                       opts: Optional[ModelOptions] = None,
+                       engine: str = "auto",
+                       splits: Optional[Sequence[Sequence[int]]] = None,
+                       **optimiser_kwargs):
+    """Jointly map N networks onto one shared platform — the f-CNN^x
+    multi-CNN scenario as a first-class problem type.
+
+    Enumerates the resource-partition menu (or the explicit ``splits``),
+    searches every per-(split, net) sub-problem with the requested
+    optimiser — with the jax engine, ALL S x N lanes as one padded
+    fleet program (``core/accel/comap_fleet.py``) — and combines
+    per-net optima into the composite ``objective`` on the host in
+    float64 (exact: the composites are monotone per-net, see
+    ``core/comap.py``). Returns a ``CoMapPlan`` whose ``plans`` hold
+    one exported ``ShardingPlan`` per net against its disjoint
+    sub-platform; an infeasible co-mapping (e.g. fewer leading-axis
+    slices than nets) returns ``feasible=False`` with no plans rather
+    than raising. Chosen split, designs, objective and history are
+    identical across engines (annealing keeps the stack-wide host/device
+    rng caveat)."""
+    from repro.core.comap import CoMapPlan, joint_search
+
+    with _trace.span("pipeline.optimise_comapping", nets=len(archs),
+                     optimiser=optimiser, objective=objective,
+                     engine=engine):
+        cp = make_comap_problem(archs, shape, platform, backend,
+                                objective, weights, exec_model, opts,
+                                splits)
+        result = joint_search(cp, optimiser=optimiser, engine=engine,
+                              **optimiser_kwargs)
+        if result.split_index < 0:
+            return CoMapPlan(split_index=-1, split=(), plans=(),
+                             objective=objective,
+                             objective_value=result.evaluation.objective,
+                             feasible=False, result=result)
+        subplats = cp.split_platforms(result.split_index)
+        with _trace.span("pipeline.export_plans", count=cp.n_nets):
+            plans = tuple(
+                export_plan(cp.graphs[i], r.variables, subplats[i],
+                            exec_model, r.evaluation)
+                for i, r in enumerate(result.per_net))
+        return CoMapPlan(split_index=result.split_index,
+                         split=result.split, plans=plans,
+                         objective=objective,
+                         objective_value=result.evaluation.objective,
+                         feasible=result.evaluation.feasible,
+                         result=result)
 
 
 def baseline_plan(arch: ArchConfig, shape: ShapeSpec,

@@ -110,6 +110,74 @@ class Platform:
         return self.assign_axes(folds)[1]
 
 
+# ----------------------------------------------------------------------
+# Resource splitting (multi-network co-mapping, docs/comapping.md)
+# ----------------------------------------------------------------------
+
+def split_axis0(platform: Platform, parts: Sequence[int],
+                check_budget: bool = True) -> Tuple[Platform, ...]:
+    """Carve disjoint sub-platforms out of ``platform`` along mesh axis 0.
+
+    ``parts[i]`` is net ``i``'s contiguous chunk of the leading mesh axis;
+    the remaining axes are inherited whole, so every sub-platform is a
+    real sub-mesh and its fold menu / realisability tables follow from
+    the ordinary ``Platform`` rules. Chips are disjoint by construction,
+    hence each net's aggregate HBM budget is exactly
+    ``sub.chips * hbm_bytes`` — splitting the chip budget splits the HBM
+    budget with it. Per-chip scalars (bandwidths, vmem) are physical
+    properties of a chip and are inherited unchanged.
+
+    Raises ``ValueError`` for non-positive chunks or when the chunks
+    overcommit the axis. ``check_budget=False`` skips only the
+    overcommit raise so ``CoMapProblem`` can defer the shared-budget
+    constraint into the candidate (``budget_violations`` marks such
+    splits infeasible instead of the constructor throwing).
+    """
+    name0, size0 = platform.mesh_axes[0]
+    parts = tuple(int(p) for p in parts)
+    if not parts:
+        raise ValueError("need at least one chunk")
+    if any(p < 1 for p in parts):
+        raise ValueError(f"every {name0}-axis chunk must be >= 1, "
+                         f"got {parts}")
+    if check_budget and sum(parts) > size0:
+        raise ValueError(f"chunks {parts} overcommit mesh axis "
+                         f"{name0}={size0}")
+    import dataclasses
+    return tuple(
+        dataclasses.replace(
+            platform,
+            name=f"{platform.name}/{name0}[{i}]={p}",
+            mesh_axes=((name0, p),) + platform.mesh_axes[1:])
+        for i, p in enumerate(parts))
+
+
+def enumerate_chip_splits(platform: Platform, n_nets: int
+                          ) -> Tuple[Tuple[int, ...], ...]:
+    """The default resource-partition decision axis for ``n_nets``
+    networks sharing ``platform``: every ordered composition of mesh
+    axis 0 into ``n_nets`` positive chunks (full allocation — the menu
+    never overcommits, and under-provisioned platforms with fewer
+    axis-0 slices than nets yield an EMPTY menu, i.e. an infeasible
+    co-mapping). Deterministic lexicographic order: the joint-search
+    history is defined over this order on every engine."""
+    if n_nets < 1:
+        raise ValueError(f"n_nets must be >= 1, got {n_nets}")
+    _, size0 = platform.mesh_axes[0]
+    out: List[Tuple[int, ...]] = []
+
+    def rec(prefix: Tuple[int, ...], remaining: int, slots: int) -> None:
+        if slots == 1:
+            if remaining >= 1:
+                out.append(prefix + (remaining,))
+            return
+        for p in range(1, remaining - slots + 2):
+            rec(prefix + (p,), remaining - p, slots - 1)
+
+    rec((), size0, n_nets)
+    return tuple(out)
+
+
 # Single-pod production platform (16 x 16 = 256 chips).
 V5E_POD = Platform()
 

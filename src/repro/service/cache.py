@@ -108,19 +108,33 @@ class SolvedCache:
     ``path`` enables JSONL persistence: ``load()`` replays the file in
     order (file order IS the LRU order), ``save()`` rewrites it from the
     current contents. Counters: ``service.cache.hits`` / ``.misses`` /
-    ``.evictions`` / ``.inserts``; gauge ``service.cache.size``.
+    ``.evictions`` / ``.inserts`` (new keys only) / ``.updates``
+    (overwrites of an existing key — these never change the size, so the
+    invariant ``inserts - evictions == size`` holds at every point);
+    gauge ``service.cache.size``.
     """
 
     def __init__(self, capacity: int = 512,
                  path: Optional[str] = None) -> None:
-        if capacity < 1:
-            raise ValueError(f"capacity must be >= 1, got {capacity}")
-        self.capacity = capacity
+        self.capacity = capacity                  # validated by the setter
         self.path = path
         self._lock = threading.Lock()
         self._entries: "OrderedDict[str, SolvedDesign]" = OrderedDict()
         if path and os.path.exists(path):
             self.load(path)
+
+    @property
+    def capacity(self) -> int:
+        return self._capacity
+
+    @capacity.setter
+    def capacity(self, value: int) -> None:
+        # capacity <= 0 used to slip through post-construction and made
+        # ``put`` evict the entry it had just inserted — reject it at
+        # every assignment, not only in ``__init__``
+        if value < 1:
+            raise ValueError(f"capacity must be >= 1, got {value}")
+        self._capacity = int(value)
 
     def __len__(self) -> int:
         with self._lock:
@@ -146,6 +160,11 @@ class SolvedCache:
         with self._lock:
             if key in self._entries:
                 self._entries.move_to_end(key)
+                self._entries[key] = design
+                _metrics.counter("service.cache.updates").inc()
+                _metrics.gauge("service.cache.size").set(
+                    len(self._entries))
+                return
             self._entries[key] = design
             _metrics.counter("service.cache.inserts").inc()
             while len(self._entries) > self.capacity:

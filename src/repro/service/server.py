@@ -27,7 +27,8 @@ Every response is bit-identical to a direct
 tests/test_service.py asserts this bitwise under concurrency.
 
 The stdlib-HTTP adapter (grown from ``launch/serve.py``'s driver idiom)
-exposes ``POST /v1/mapping`` plus ``/healthz`` and ``/metricsz``; see
+exposes ``POST /v1/mapping`` and ``POST /v1/comap`` (multi-network
+co-mapping, docs/comapping.md) plus ``/healthz`` and ``/metricsz``; see
 ``python -m repro.service.server --help`` and docs/service.md.
 
 This module imports no jax at module scope: under ``REPRO_NO_JAX`` the
@@ -235,6 +236,44 @@ class MappingServer:
                ) -> MappingResponse:
         """Convenience: block on a submitted future."""
         return future.result(timeout)
+
+    # ------------------------------------------------------------------
+    # co-mapping (synchronous: one request is already a whole fleet)
+    # ------------------------------------------------------------------
+    def solve_comap(self, archs, shape: ShapeSpec,
+                    platform: Platform = V5E_POD, *,
+                    backend: str = "spmd",
+                    optimiser: str = "rule_based",
+                    objective: str = "weighted_throughput",
+                    weights=None, exec_model: str = "streaming",
+                    opts=None, engine: str = "auto", splits=None,
+                    **optimiser_kwargs):
+        """Jointly map N architectures onto one shared platform
+        (``pipeline.optimise_comapping``; POST /v1/comap).
+
+        Synchronous by design: a single co-mapping request already fans
+        out S x N optimiser lanes (one fleet program on the jax
+        engine), so there is nothing for the dispatcher to batch it
+        with — it runs on the calling thread and returns the
+        ``CoMapPlan`` directly. ``archs`` entries may be ``ArchConfig``s
+        or registry names."""
+        if self._closing.is_set():
+            raise ServiceClosed("server is closed")
+        from repro.core.pipeline import optimise_comapping
+        with _trace.span("service.comap", nets=len(archs),
+                         optimiser=optimiser, engine=engine):
+            t0 = time.monotonic()
+            plan = optimise_comapping(
+                archs, shape, platform, backend=backend,
+                optimiser=optimiser, objective=objective,
+                weights=weights, exec_model=exec_model, opts=opts,
+                engine=engine, splits=splits, **optimiser_kwargs)
+            _metrics.counter("service.comap.requests").inc()
+            if not plan.feasible:
+                _metrics.counter("service.comap.infeasible").inc()
+            _metrics.histogram("service.comap.latency_s").observe(
+                time.monotonic() - t0)
+            return plan
 
     # ------------------------------------------------------------------
     # dispatcher
@@ -467,6 +506,70 @@ def _parse_request(body: dict):
                 **kwargs)
 
 
+def _parse_comap_request(body: dict):
+    """Decode one POST /v1/comap JSON body into solve_comap() arguments."""
+    names = body["archs"]
+    if isinstance(names, str):
+        raise ValueError("archs must be a list of registry names, got a "
+                         "single string")
+    archs = [get_arch(str(a)) for a in names]
+    if body.get("reduced"):
+        from repro.configs import reduced
+        archs = [reduced(a) for a in archs]
+    sh = body.get("shape") or {}
+    shape = ShapeSpec(str(sh.get("name", "serve")),
+                      int(sh.get("seq_len", 256)),
+                      int(sh.get("global_batch", 16)),
+                      str(sh.get("mode", "train")))
+    pl = body.get("platform")
+    if pl is None:
+        platform = V5E_POD
+    else:
+        axes = tuple((str(n), int(s)) for n, s in pl["mesh_axes"])
+        scalars = {k: float(pl[k]) for k in
+                   ("peak_flops", "hbm_bw", "hbm_bytes", "ici_bw",
+                    "dma_bw", "reconf_fixed_s", "vmem_bytes") if k in pl}
+        platform = Platform(name=str(pl.get("name", "custom")),
+                            mesh_axes=axes, **scalars)
+    weights = body.get("weights")
+    splits = body.get("splits")
+    kwargs = dict(body.get("optimiser_kwargs") or {})
+    return dict(archs=archs, shape=shape, platform=platform,
+                backend=str(body.get("backend", "spmd")),
+                optimiser=str(body.get("optimiser", "rule_based")),
+                objective=str(body.get("objective",
+                                       "weighted_throughput")),
+                weights=(None if weights is None
+                         else [float(w) for w in weights]),
+                exec_model=str(body.get("exec_model", "streaming")),
+                engine=str(body.get("engine", "auto")),
+                splits=(None if splits is None
+                        else [[int(p) for p in s] for s in splits]),
+                **kwargs)
+
+
+def _comap_summary(plan) -> dict:
+    return {
+        "feasible": plan.feasible,
+        "split_index": plan.split_index,
+        "split": list(plan.split),
+        "objective": plan.objective,
+        "objective_value": plan.objective_value,
+        "points": int(plan.result.points),
+        "total_s": plan.result.seconds,
+        "violations": list(plan.result.evaluation.violations)
+        if not plan.feasible else [],
+        "nets": [{
+            "arch": p.arch_name,
+            "platform": p.platform.name,
+            "partitions": len(p.partitions),
+            "objective_value": p.objective_value,
+            "throughput": p.throughput,
+            "latency": p.latency,
+        } for p in plan.plans],
+    }
+
+
 def serve_http(server: MappingServer, host: str = "127.0.0.1",
                port: int = 8754, request_timeout_s: float = 300.0):
     """Wrap a started ``MappingServer`` in a ``ThreadingHTTPServer``.
@@ -497,9 +600,14 @@ def serve_http(server: MappingServer, host: str = "127.0.0.1",
                 self._send(404, {"error": f"no route {self.path}"})
 
         def do_POST(self):
-            if self.path != "/v1/mapping":
+            if self.path == "/v1/mapping":
+                self._do_mapping()
+            elif self.path == "/v1/comap":
+                self._do_comap()
+            else:
                 self._send(404, {"error": f"no route {self.path}"})
-                return
+
+        def _do_mapping(self):
             try:
                 n = int(self.headers.get("Content-Length", 0))
                 body = json.loads(self.rfile.read(n) or b"{}")
@@ -521,6 +629,25 @@ def serve_http(server: MappingServer, host: str = "127.0.0.1",
                 self._send(500, {"error": str(e)})
             else:
                 self._send(200, _plan_summary(resp))
+
+        def _do_comap(self):
+            try:
+                n = int(self.headers.get("Content-Length", 0))
+                body = json.loads(self.rfile.read(n) or b"{}")
+                kw = _parse_comap_request(body)
+            except Exception as e:
+                self._send(400, {"error": f"bad request: {e}"})
+                return
+            try:
+                plan = server.solve_comap(**kw)
+            except (EngineUnavailable, ServiceOverloaded) as e:
+                self._send(503, {"error": str(e)})
+            except (ValueError, TypeError, KeyError) as e:
+                self._send(400, {"error": str(e)})
+            except Exception as e:
+                self._send(500, {"error": str(e)})
+            else:
+                self._send(200, _comap_summary(plan))
 
     return ThreadingHTTPServer((host, port), Handler)
 

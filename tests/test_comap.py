@@ -1,0 +1,384 @@
+"""Multi-network co-mapping (docs/comapping.md).
+
+Covers the resource-split decision axis (platform.split_axis0 /
+enumerate_chip_splits), the CoMapProblem scalar reference, the
+vectorised CoMapBatchedEvaluator mirror, the joint search across
+engines, the pipeline/service wiring, and the rule-based merge-loop
+livelock regression the co-mapping sub-meshes exposed. Imports no jax
+at module scope — the no-jax CI matrix runs everything here, with the
+jax engine cells gated per-test.
+"""
+import math
+
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.configs import get_arch, reduced
+from repro.configs.base import ShapeSpec
+from repro.core.accel import jax_available
+from repro.core.batched_eval import CoMapBatchedEvaluator
+from repro.core.comap import CoMapResult, joint_search
+from repro.core.hdgraph import Variables
+from repro.core.objectives import (
+    COMAP_OBJECTIVES,
+    CoMapProblem,
+    combine_composite,
+)
+from repro.core.pipeline import make_comap_problem, optimise_comapping
+from repro.core.platform import (
+    AbstractPlatform,
+    Platform,
+    enumerate_chip_splits,
+    split_axis0,
+)
+
+from conftest import TINY_SHAPE
+
+PLAT = Platform(name="t", mesh_axes=(("data", 4), ("model", 4)))
+
+
+def _archs(n=2):
+    names = ["tinyllama-1.1b", "llama3.2-1b", "granite-moe-1b-a400m"]
+    return [reduced(get_arch(names[i % 3]), num_layers=2)
+            for i in range(n)]
+
+
+def _cp(n=2, **kw):
+    return make_comap_problem(_archs(n), TINY_SHAPE, PLAT, **kw)
+
+
+# ----------------------------------------------------------------------
+# resource splits
+# ----------------------------------------------------------------------
+
+def test_enumerate_chip_splits_compositions():
+    assert enumerate_chip_splits(PLAT, 1) == ((4,),)
+    assert enumerate_chip_splits(PLAT, 2) == ((1, 3), (2, 2), (3, 1))
+    assert enumerate_chip_splits(PLAT, 3) == ((1, 1, 2), (1, 2, 1),
+                                              (2, 1, 1))
+    assert enumerate_chip_splits(PLAT, 4) == ((1, 1, 1, 1),)
+    # under-provisioned: more nets than leading-axis slices -> empty menu
+    assert enumerate_chip_splits(PLAT, 5) == ()
+    with pytest.raises(ValueError, match="n_nets"):
+        enumerate_chip_splits(PLAT, 0)
+
+
+@given(n=st.integers(1, 4))
+@settings(max_examples=20, deadline=None)
+def test_enumerate_chip_splits_properties(n):
+    menu = enumerate_chip_splits(PLAT, n)
+    size0 = PLAT.mesh_axes[0][1]
+    assert len(set(menu)) == len(menu)              # no duplicates
+    assert list(menu) == sorted(menu)               # deterministic order
+    for s in menu:
+        assert len(s) == n and all(p >= 1 for p in s)
+        assert sum(s) == size0                      # full allocation
+
+
+def test_split_axis0_sub_platforms():
+    subs = split_axis0(PLAT, (1, 3))
+    assert [p.chips for p in subs] == [4, 12]
+    assert sum(p.chips for p in subs) == PLAT.chips
+    assert subs[0].mesh_axes == (("data", 1), ("model", 4))
+    assert subs[1].mesh_axes == (("data", 3), ("model", 4))
+    # per-chip scalars are physical chip properties: inherited unchanged
+    for p in subs:
+        assert p.hbm_bytes == PLAT.hbm_bytes
+        assert p.peak_flops == PLAT.peak_flops
+    # aggregate HBM follows the chip split
+    assert subs[0].chips * subs[0].hbm_bytes \
+        + subs[1].chips * subs[1].hbm_bytes == PLAT.chips * PLAT.hbm_bytes
+
+
+def test_split_axis0_preserves_subclass():
+    ap = AbstractPlatform(name="abs",
+                          mesh_axes=(("data", 4), ("model", 2)))
+    subs = split_axis0(ap, (2, 2))
+    assert all(isinstance(p, AbstractPlatform) for p in subs)
+    assert subs[0].folds_realizable((2, 2, 1))      # divisor rule kept
+
+
+def test_split_axis0_validation():
+    with pytest.raises(ValueError, match="at least one"):
+        split_axis0(PLAT, ())
+    with pytest.raises(ValueError, match=">= 1"):
+        split_axis0(PLAT, (0, 4))
+    with pytest.raises(ValueError, match="overcommit"):
+        split_axis0(PLAT, (3, 3))
+
+
+# ----------------------------------------------------------------------
+# CoMapProblem scalar reference
+# ----------------------------------------------------------------------
+
+def test_comap_problem_validation():
+    g = _cp().graphs
+    with pytest.raises(ValueError, match="at least one graph"):
+        CoMapProblem(graphs=[], platform=PLAT, backend=_cp().backend)
+    with pytest.raises(ValueError, match="composite objective"):
+        make_comap_problem(_archs(), TINY_SHAPE, PLAT, objective="speed")
+    with pytest.raises(ValueError, match="weights"):
+        make_comap_problem(_archs(), TINY_SHAPE, PLAT, weights=[1.0])
+    with pytest.raises(ValueError, match="positive"):
+        make_comap_problem(_archs(), TINY_SHAPE, PLAT,
+                           weights=[1.0, -1.0])
+    assert g is not None
+
+
+def test_per_net_objective_tracks_composite():
+    assert _cp(objective="worst_latency").per_net_objective == "latency"
+    for obj in ("weighted_throughput", "maxmin_throughput"):
+        assert _cp(objective=obj).per_net_objective == "throughput"
+
+
+def test_combine_composite_values():
+    cp = _cp()
+    evals = [cp.subproblem(1, i).evaluate(
+        cp.subproblem(1, i).backend.initial(cp.graphs[i]))
+        for i in range(2)]
+    thr = [e.throughput for e in evals]
+    lat = [e.latency for e in evals]
+    assert combine_composite("weighted_throughput", (1.0, 1.0), evals) \
+        == -(thr[0] + thr[1])
+    assert combine_composite("maxmin_throughput", (1.0, 1.0), evals) \
+        == -min(thr)
+    assert combine_composite("worst_latency", (1.0, 1.0), evals) \
+        == max(lat)
+    # weights scale the throughput composites
+    assert combine_composite("weighted_throughput", (2.0, 1.0), evals) \
+        == -(2.0 * thr[0] + thr[1])
+    with pytest.raises(ValueError, match="composite"):
+        combine_composite("speed", (1.0, 1.0), evals)
+
+
+def test_over_budget_user_split_rejected_inside_candidate():
+    """The shared-budget constraint is evaluated per candidate: an
+    overcommitted user split makes its candidates infeasible (and the
+    joint search skips it) instead of raising at construction."""
+    cp = make_comap_problem(_archs(), TINY_SHAPE, PLAT,
+                            splits=[(2, 2), (4, 4)])
+    assert cp.budget_violations(0) == []
+    assert any("shared budget" in m for m in cp.budget_violations(1))
+    designs = [cp.subproblem(1, i).backend.initial(cp.graphs[i])
+               for i in range(2)]
+    ev = cp.evaluate(1, designs)
+    assert not ev.feasible
+    assert any("shared budget" in m for m in ev.violations)
+    r = joint_search(cp, optimiser="rule_based", engine="numpy")
+    assert r.split_index == 0                      # only the legal split
+
+
+def test_under_provisioned_comapping_is_infeasible():
+    cp = _cp(5)                                    # 5 nets, axis0 = 4
+    assert cp.resolved_splits() == ()
+    r = joint_search(cp, optimiser="rule_based", engine="numpy")
+    assert isinstance(r, CoMapResult)
+    assert r.split_index == -1 and r.split == () and r.per_net == ()
+    assert r.evaluation.objective == math.inf
+    assert not r.evaluation.feasible
+    assert any("cannot host 5 nets" in m for m in r.evaluation.violations)
+
+
+def test_evaluate_range_checks():
+    cp = _cp()
+    designs = [cp.subproblem(0, i).backend.initial(cp.graphs[i])
+               for i in range(2)]
+    with pytest.raises(ValueError, match="split_index"):
+        cp.evaluate(99, designs)
+    with pytest.raises(ValueError, match="designs"):
+        cp.evaluate(0, designs[:1])
+
+
+# ----------------------------------------------------------------------
+# batched mirror
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("objective", COMAP_OBJECTIVES)
+def test_batched_evaluator_matches_scalar(objective):
+    cp = _cp(objective=objective, weights=[2.0, 1.0]
+             if objective != "worst_latency" else None)
+    be = cp.batched()
+    menu = cp.resolved_splits()
+    for s in range(len(menu)):
+        rows = []
+        for seed in range(3):
+            row = []
+            for i in range(cp.n_nets):
+                sub = cp.subproblem(s, i)
+                v = sub.backend.initial(cp.graphs[i])
+                if seed:                           # vary the designs
+                    cands = sub.backend.candidates(cp.graphs[i], 0,
+                                                   "s_out", sub.platform)
+                    v = sub.backend.set_fold(cp.graphs[i], v, 0, "s_out",
+                                             cands[min(seed,
+                                                       len(cands) - 1)])
+                row.append(v)
+            rows.append(row)
+        res = be.evaluate_batch(s, rows)
+        assert res.budget_ok
+        for b, row in enumerate(rows):
+            ev = cp.evaluate(s, row)
+            assert res.objective[b] == pytest.approx(ev.objective,
+                                                     abs=1e-9, rel=1e-9)
+            assert bool(res.feasible[b]) == ev.feasible
+
+
+def test_split_join_variables_roundtrip():
+    cp = _cp()
+    be = CoMapBatchedEvaluator(cp)
+    n0, n1 = (len(g.nodes) for g in cp.graphs)
+    per_net = [
+        Variables((1,), *(tuple([1] * n0),) * 3),
+        Variables((0, 2), *(tuple([2] * n1),) * 3),
+    ]
+    joint = be.join_variables(per_net)
+    assert len(joint.s_in) == n0 + n1
+    assert joint.cuts == (1, n0, n0 + 2)
+    back = be.split_variables(joint)
+    assert back == per_net
+    # no cut materialises at a net boundary in either direction
+    assert all(c != n0 - 1 for c in joint.cuts)
+    with pytest.raises(ValueError, match="node axis"):
+        be.split_variables(per_net[0])
+
+
+# ----------------------------------------------------------------------
+# joint search across engines
+# ----------------------------------------------------------------------
+
+def _assert_same(a: CoMapResult, b: CoMapResult):
+    assert a.split_index == b.split_index and a.split == b.split
+    assert a.evaluation.objective == b.evaluation.objective
+    assert a.points == b.points
+    assert a.history == b.history
+    assert [r.variables for r in a.per_net] \
+        == [r.variables for r in b.per_net]
+
+
+@pytest.mark.parametrize("optimiser,kw", [
+    ("brute_force", dict(max_points=150, batch_size=64)),
+    ("rule_based", {}),
+])
+def test_joint_search_engine_identity(optimiser, kw):
+    ref = joint_search(_cp(), optimiser=optimiser, engine="scalar", **kw)
+    got = joint_search(_cp(), optimiser=optimiser, engine="numpy", **kw)
+    _assert_same(ref, got)
+    assert ref.evaluation.feasible
+    assert ref.history and ref.history[-1][1] == ref.evaluation.objective
+    if jax_available():
+        dev = joint_search(_cp(), optimiser=optimiser, engine="jax", **kw)
+        _assert_same(ref, dev)
+
+
+def test_joint_search_annealing_host_identity():
+    """SA keeps the stack-wide caveat (device rng differs from host by
+    design), so its cross-engine contract here is scalar == numpy."""
+    kw = dict(seed=3, max_iters=30, chains=2)
+    ref = joint_search(_cp(), optimiser="annealing", engine="scalar", **kw)
+    got = joint_search(_cp(), optimiser="annealing", engine="numpy", **kw)
+    _assert_same(ref, got)
+
+
+def test_joint_search_picks_best_split():
+    """The winner must be the argmin of the per-split composites — spot
+    check against an exhaustive per-split evaluation."""
+    cp = _cp()
+    r = joint_search(cp, optimiser="rule_based", engine="numpy")
+    per_split = []
+    for s in range(len(cp.resolved_splits())):
+        lane = [joint_search(
+            make_comap_problem(_archs(), TINY_SHAPE, PLAT,
+                               splits=[cp.resolved_splits()[s]]),
+            optimiser="rule_based", engine="numpy")]
+        per_split.append(lane[0].evaluation.objective)
+    assert r.evaluation.objective == min(per_split)
+    assert r.split == cp.resolved_splits()[per_split.index(min(per_split))]
+
+
+def test_joint_search_unknown_optimiser():
+    with pytest.raises(ValueError, match="unknown optimiser"):
+        joint_search(_cp(), optimiser="magic")
+
+
+# ----------------------------------------------------------------------
+# pipeline + service wiring
+# ----------------------------------------------------------------------
+
+def test_optimise_comapping_plan():
+    plan = optimise_comapping(_archs(), TINY_SHAPE, PLAT,
+                              optimiser="rule_based", engine="numpy")
+    assert plan.feasible and len(plan.plans) == 2
+    assert plan.split == plan.result.split
+    assert sum(p.platform.chips for p in plan.plans) == PLAT.chips
+    for p, r in zip(plan.plans, plan.result.per_net):
+        assert p.objective_value == r.evaluation.objective
+    assert plan.objective_value == plan.result.evaluation.objective
+
+
+def test_optimise_comapping_infeasible_plan():
+    plan = optimise_comapping(_archs(5), TINY_SHAPE, PLAT,
+                              optimiser="rule_based", engine="numpy")
+    assert not plan.feasible and plan.plans == () \
+        and plan.split_index == -1
+    assert plan.objective_value == math.inf
+
+
+def test_parse_comap_request():
+    from repro.service.server import _parse_comap_request
+
+    kw = _parse_comap_request({
+        "archs": ["tinyllama-1.1b", "llama3.2-1b"], "reduced": True,
+        "shape": {"name": "t", "seq_len": 256, "global_batch": 16,
+                  "mode": "train"},
+        "platform": {"name": "t4",
+                     "mesh_axes": [["data", 4], ["model", 4]]},
+        "objective": "maxmin_throughput", "weights": [2, 1],
+        "splits": [[2, 2]], "engine": "numpy",
+        "optimiser_kwargs": {"multi_start": False},
+    })
+    assert [a.name for a in kw["archs"]] == ["tinyllama-1.1b",
+                                             "llama3.2-1b"]
+    assert kw["platform"].mesh_axes == (("data", 4), ("model", 4))
+    assert kw["objective"] == "maxmin_throughput"
+    assert kw["weights"] == [2.0, 1.0]
+    assert kw["splits"] == [[2, 2]]
+    assert kw["multi_start"] is False
+    with pytest.raises(ValueError, match="single string"):
+        _parse_comap_request({"archs": "tinyllama-1.1b"})
+
+
+def test_solve_comap_service():
+    from repro.service import MappingServer
+    from repro.service.server import ServiceClosed
+
+    with MappingServer() as srv:
+        plan = srv.solve_comap(_archs(), TINY_SHAPE, PLAT,
+                               optimiser="rule_based", engine="numpy")
+        assert plan.feasible and len(plan.plans) == 2
+        direct = optimise_comapping(_archs(), TINY_SHAPE, PLAT,
+                                    optimiser="rule_based",
+                                    engine="numpy")
+        assert plan.split == direct.split
+        assert plan.objective_value == direct.objective_value
+    with pytest.raises(ServiceClosed):
+        srv.solve_comap(_archs(), TINY_SHAPE, PLAT, engine="numpy")
+
+
+# ----------------------------------------------------------------------
+# merge-loop livelock regression
+# ----------------------------------------------------------------------
+
+def test_rule_based_terminates_on_non_pow2_submesh():
+    """Regression: the Algorithm-2 merge loop livelocked when repair
+    re-added a removed cut (a no-op 'merge' at equal objective was
+    accepted forever). Never seen on power-of-two meshes; the 3-wide
+    sub-platforms co-mapping carves hit it immediately."""
+    from repro.core.optimizers import OPTIMIZERS
+
+    cp = _cp()
+    sub = cp.subproblem(0, 1)                      # (data=3, model=4)
+    assert sub.platform.mesh_axes[0] == ("data", 3)
+    r = OPTIMIZERS["rule_based"](sub, engine="numpy")
+    assert r.evaluation.feasible
+    r2 = OPTIMIZERS["rule_based"](sub, engine="scalar")
+    assert r.variables == r2.variables and r.history == r2.history

@@ -111,6 +111,82 @@ def test_resource_constraint_fires_for_tiny_hbm():
     assert any("HBM residency" in m for m in rep.violations)
 
 
+def test_duplicate_cuts_rejected():
+    g = _graph()
+    n = len(g.nodes)
+    ones = tuple([1] * n)
+    with pytest.raises(ValueError, match="strictly increasing"):
+        Variables((2, 2), ones, ones, ones)
+    with pytest.raises(ValueError, match="strictly increasing"):
+        Variables((3, 1), ones, ones, ones)
+    with pytest.raises(ValueError, match="duplicate cut"):
+        partitions_from_cuts(g, (2, 2))
+
+
+def test_out_of_range_cuts_rejected():
+    g = _graph()
+    n = len(g.nodes)
+    ones = tuple([1] * n)
+    # the last valid cut index is n - 2 (a cut AFTER the last node would
+    # leave an empty partition)
+    with pytest.raises(ValueError, match="out of range"):
+        partitions_from_cuts(g, (n - 1,))
+    with pytest.raises(ValueError, match="negative cut"):
+        Variables((-1,), ones, ones, ones)
+    rep = C.ConstraintReport()
+    C.check_channel_factor(g, Variables((), ones, ones, ones)
+                           .with_cuts((n + 3,)), PLAT, rep)
+    assert any("out of range" in m for m in rep.violations)
+
+
+def test_with_cuts_canonicalises():
+    """``with_cuts`` is the entry point that ACCEPTS raw cut sets: it
+    sorts and dedups, so downstream code sees only canonical vectors."""
+    g = _graph()
+    n = len(g.nodes)
+    ones = tuple([1] * n)
+    v = Variables((), ones, ones, ones).with_cuts((3, 1, 3, 2))
+    assert v.cuts == (1, 2, 3)
+    assert [len(p) for p in partitions_from_cuts(g, v.cuts)]
+
+
+def test_fold_vector_length_mismatch_rejected():
+    g = _graph()
+    n = len(g.nodes)
+    ones = tuple([1] * n)
+    with pytest.raises(ValueError, match="fold vectors"):
+        Variables((), ones + (1,), ones, ones)
+
+
+@given(st.data())
+@settings(max_examples=60, deadline=None)
+def test_degenerate_cut_vectors_randomized(data):
+    """Differential: for random raw cut sets, ``with_cuts`` canonicalises
+    while the raw ``Variables`` constructor accepts exactly the strictly
+    increasing in-range ones."""
+    g = _graph()
+    n = len(g.nodes)
+    ones = tuple([1] * n)
+    raw = tuple(data.draw(st.integers(-2, n + 1))
+                for _ in range(data.draw(st.integers(0, 5))))
+    canonical = tuple(sorted(set(raw)))
+    strictly_increasing = raw == canonical
+    in_range = all(0 <= c for c in raw)
+    if strictly_increasing and in_range:
+        v = Variables(raw, ones, ones, ones)
+        assert v.cuts == raw
+    else:
+        with pytest.raises(ValueError):
+            Variables(raw, ones, ones, ones)
+    # with_cuts accepts anything non-negative and canonicalises it
+    if in_range:
+        v2 = Variables((), ones, ones, ones).with_cuts(raw)
+        assert v2.cuts == canonical
+        if all(c <= n - 2 for c in canonical):
+            parts = partitions_from_cuts(g, v2.cuts)
+            assert sorted(i for p in parts for i in p) == list(range(n))
+
+
 @given(st.data())
 @settings(max_examples=60, deadline=None)
 def test_check_consistency_random_folds(data):

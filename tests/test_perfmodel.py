@@ -143,3 +143,27 @@ def test_eval_nonnegative_and_finite(si, so, k):
         e = node_eval(n, si, so, k, PLAT, mode)
         for x in (e.compute_s, e.memory_s, e.collective_s, e.hbm_resident):
             assert x >= 0.0 and x == x            # finite, non-negative
+
+
+def test_vocab_allreduce_backward_doubles_like_tp():
+    """Regression: the embedding's vocab all-reduce must carry the same
+    train-mode backward multiplier as tp_allreduce. The multiplier used
+    to be dropped on this path, making train bytes equal eval bytes;
+    train is exactly 2x eval, matching the tp_allreduce convention, in
+    every engine."""
+    arch = reduced(get_arch("tinyllama-1.1b"), num_layers=1)
+    g = build_hdgraph(arch, TINY_SHAPE)
+    embed = next(n for n in g.nodes if n.kind == "embed")
+    assert embed.collective_kind == "vocab_allreduce"
+    e_train = node_eval(embed, 1, 4, 1, PLAT, "train")
+    e_eval = node_eval(embed, 1, 4, 1, PLAT, "prefill")
+    assert e_train.collective_bytes == pytest.approx(
+        2.0 * e_eval.collective_bytes)
+    assert e_train.collective_bytes > 0
+    # same ratio the tp_allreduce path exhibits
+    ffn = next(n for n in g.nodes if n.kind == "ffn")
+    f_train = node_eval(ffn, 1, 4, 1, PLAT, "train")
+    f_eval = node_eval(ffn, 1, 4, 1, PLAT, "prefill")
+    assert (f_train.collective_bytes / f_eval.collective_bytes
+            == pytest.approx(e_train.collective_bytes
+                             / e_eval.collective_bytes))

@@ -152,6 +152,50 @@ def test_portfolio_mismatched_lengths_raise_up_front():
     assert len(plans) == 2
 
 
+def test_portfolio_duplicates_coalesce_without_jax():
+    """Regression: the dedupe path must work (and the portfolio must
+    survive a broken fingerprint) on the no-jax matrix.
+    ``problem_fingerprint`` is jax-free, so duplicates coalesce to one
+    engine run with identical fanned-out results; if fingerprinting
+    breaks, the portfolio warns and runs every problem rather than
+    failing."""
+    from repro.core.pipeline import optimise_portfolio
+    from repro.obs import metrics
+
+    archs = [_arch(), _arch(), reduced(get_arch("llama3.2-1b"))]
+    kw = dict(optimiser="brute_force", engine="numpy", max_points=64,
+              batch_size=32)
+    plans = optimise_portfolio(archs, SHAPE, PLAT, **kw)
+    assert len(plans) == 3
+    # archs[0] == archs[1]: one engine run, identical fanned-out plans
+    assert metrics.counter("pipeline.portfolio.coalesced").value == 1
+    assert plans[0].objective_value == plans[1].objective_value
+    assert plans[0].partitions == plans[1].partitions
+
+
+def test_portfolio_survives_broken_fingerprint(monkeypatch):
+    """A failing ``problem_fingerprint`` import/call degrades to
+    per-problem runs with a RuntimeWarning — dedupe is an optimisation,
+    never a correctness requirement."""
+    import repro.core.accel.lowering as lowering
+    from repro.core.pipeline import optimise_portfolio
+    from repro.obs import metrics
+
+    def boom(problem):
+        raise RuntimeError("fingerprint unavailable")
+
+    monkeypatch.setattr(lowering, "problem_fingerprint", boom)
+    archs = [_arch(), _arch()]
+    with pytest.warns(RuntimeWarning, match="dedupe unavailable"):
+        plans = optimise_portfolio(archs, SHAPE, PLAT,
+                                   optimiser="brute_force",
+                                   engine="numpy", max_points=64,
+                                   batch_size=32)
+    assert len(plans) == 2 and all(p.partitions for p in plans)
+    assert metrics.counter("pipeline.portfolio.coalesced").value == 0
+    assert plans[0].objective_value == plans[1].objective_value
+
+
 def test_portfolio_per_problem_platforms_on_host_engines():
     """A heterogeneous-platform portfolio works on every engine — the
     numpy per-problem loop included (this cell must pass without jax)."""

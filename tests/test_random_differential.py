@@ -562,6 +562,63 @@ def test_random_request_key_keying_properties(data):
     assert request_key(prob, "rule_based", "numpy", {}) != k
 
 
+def test_random_cache_counter_properties():
+    """SolvedCache counter contract under random op sequences, checked
+    against a hand-rolled LRU model: ``inserts - evictions == size``
+    after EVERY operation, overwrites bump ``updates`` (never
+    ``inserts``), and non-positive capacities are rejected at both
+    construction and post-hoc assignment."""
+    from repro.obs import metrics
+    from repro.service.cache import SolvedCache, SolvedDesign
+
+    def design(i):
+        return SolvedDesign(cuts=(), s_in=(i,), s_out=(i,), kern=(1,),
+                            points=i, seconds=0.5, history=(),
+                            name="rule_based")
+
+    def counters():
+        return tuple(metrics.counter(f"service.cache.{k}").value
+                     for k in ("inserts", "updates", "evictions"))
+
+    for cap in (0, -3):
+        with pytest.raises(ValueError, match="capacity"):
+            SolvedCache(capacity=cap)
+    c = SolvedCache(capacity=2)
+    with pytest.raises(ValueError, match="capacity"):
+        c.capacity = 0
+
+    rng = random.Random(1234)
+    for cap in (1, 2, 4):
+        cache = SolvedCache(capacity=cap)
+        base = counters()
+        model = []                                # LRU order, oldest first
+        exp_ins = exp_upd = exp_evt = 0
+        for step in range(120):
+            key = f"k{rng.randrange(6)}"
+            if rng.random() < 0.3:
+                hit = cache.get(key)
+                assert (hit is not None) == (key in model)
+                if key in model:
+                    model.remove(key)
+                    model.append(key)
+            else:
+                cache.put(key, design(step))
+                if key in model:
+                    model.remove(key)
+                    model.append(key)
+                    exp_upd += 1
+                else:
+                    model.append(key)
+                    exp_ins += 1
+                    if len(model) > cap:
+                        model.pop(0)
+                        exp_evt += 1
+            ins, upd, evt = (x - b for x, b in zip(counters(), base))
+            assert (ins, upd, evt) == (exp_ins, exp_upd, exp_evt), step
+            assert ins - evt == len(cache) == len(model)    # invariant
+            assert all(k in cache for k in model)
+
+
 def test_service_cache_eviction_refill_roundtrip(tmp_path):
     """LRU eviction order + JSONL persistence round-trip: a reloaded
     cache serves exactly the surviving entries, in the same LRU order."""
@@ -591,3 +648,147 @@ def test_service_cache_eviction_refill_roundtrip(tmp_path):
     for i in range(10, 13):
         warm.put(f"k{i}", design(i))
     assert len(warm) == 4 and "k12" in warm and "k4" not in warm
+
+
+# ----------------------------------------------------------------------
+# multi-network co-mapping: scalar == numpy == jax on random fleets
+# ----------------------------------------------------------------------
+
+@st.composite
+def comap_problems(draw):
+    """2-4 random nets sharing one small platform. Axis-0 sizes include
+    3 (the non-power-of-two width that found the rule-based merge-loop
+    livelock) and 2 (so 3- and 4-net draws are under-provisioned: an
+    EMPTY split menu, the infeasible edge)."""
+    from repro.core.objectives import COMAP_OBJECTIVES, CoMapProblem
+
+    n = draw(st.integers(2, 4))
+    nets = [draw(graphs()) for _ in range(n)]
+    a = draw(st.sampled_from((2, 3, 4)))
+    b = draw(st.sampled_from((2, 4)))
+    platform = Platform(
+        name=f"comap-{a}x{b}", mesh_axes=(("data", a), ("model", b)),
+        hbm_bytes=float(draw(st.sampled_from([4, 8, 16])) * 2 ** 30))
+    objective = draw(st.sampled_from(sorted(COMAP_OBJECTIVES)))
+    weights = (tuple(draw(st.sampled_from((0.5, 1.0, 2.0)))
+                     for _ in range(n))
+               if draw(st.booleans()) else None)
+    return CoMapProblem(
+        graphs=nets, platform=platform,
+        backend=BACKENDS[draw(st.sampled_from(sorted(BACKENDS)))],
+        objective=objective, weights=weights,
+        exec_model=draw(st.sampled_from(("streaming", "spmd"))),
+        opts=ModelOptions())
+
+
+def _fresh_cp(cp):
+    """Cache-free clone — engines must not share memoised sub-problems."""
+    from repro.core.objectives import CoMapProblem
+
+    return CoMapProblem(graphs=cp.graphs, platform=cp.platform,
+                        backend=cp.backend, objective=cp.objective,
+                        weights=cp.weights, exec_model=cp.exec_model,
+                        batch_amortisation=cp.batch_amortisation,
+                        opts=cp.opts, splits=cp.splits)
+
+
+def _check_comap_evaluate(data):
+    """For every split of a random co-map problem, the batched evaluator
+    composite/feasibility equals the float64 scalar reference, the
+    joint<->per-net variable codecs round-trip, and the per-lane jax
+    evaluator recombines to the same composite at f32 tolerance."""
+    cp = data.draw(comap_problems())
+    be = cp.batched()
+    S, N = len(cp.resolved_splits()), cp.n_nets
+    for s in range(S):
+        rows = []
+        for r in range(3):
+            row = [_random_designs(cp.subproblem(s, i), r + 1,
+                                   seed=31 * s + i)[-1] for i in range(N)]
+            rows.append(row)
+            assert be.split_variables(be.join_variables(row)) == row
+        res = be.evaluate_batch(s, rows)
+        for r, row in enumerate(rows):
+            ev = cp.evaluate(s, row)
+            assert bool(res.feasible[r]) == ev.feasible
+            if ev.objective == np.inf or res.objective[r] == np.inf:
+                assert ev.objective == res.objective[r]
+            else:
+                assert res.objective[r] == pytest.approx(ev.objective,
+                                                         rel=1e-9)
+        if not jax_available():
+            continue
+        from repro.core.accel.eval_jax import JaxEvaluator
+        from repro.core.objectives import combine_composite
+        for r, row in enumerate(rows):
+            ev = cp.evaluate(s, row)
+            if not ev.feasible:
+                continue
+            lanes = []
+            for i in range(N):
+                sub = cp.subproblem(s, i)
+                rj = JaxEvaluator.from_problem(sub).evaluate_batch(
+                    *sub.batched().pack([row[i]]))
+                lanes.append(sub.evaluate(row[i]))
+                assert rj.objective[0] == pytest.approx(
+                    lanes[-1].objective, rel=F32_RTOL)
+            comp = combine_composite(cp.objective, cp.net_weights, lanes)
+            assert comp == pytest.approx(ev.objective, rel=F32_RTOL)
+
+
+def _check_comap_optimisers(data):
+    """joint_search returns the identical split, per-net designs,
+    composite and improvement history on every engine — brute force and
+    rule based across the full ladder, annealing scalar == numpy (the
+    stack-wide device-rng caveat) — including the empty-menu infeasible
+    edge, where every engine agrees on the inf result."""
+    from repro.core.comap import joint_search
+
+    cp = data.draw(comap_problems())
+    matrix = [("brute_force", dict(max_points=150, batch_size=64),
+               jax_available()),
+              ("rule_based", {}, jax_available()),
+              ("annealing", dict(seed=7, max_iters=24, chains=2), False)]
+    for optimiser, kw, device_too in matrix:
+        a = joint_search(_fresh_cp(cp), optimiser=optimiser,
+                         engine="scalar", **kw)
+        engines = ["numpy"] + (["jax"] if device_too else [])
+        for eng in engines:
+            b = joint_search(_fresh_cp(cp), optimiser=optimiser,
+                             engine=eng, **kw)
+            assert a.split_index == b.split_index and a.split == b.split
+            assert a.points == b.points
+            assert a.history == b.history
+            assert a.evaluation.objective == b.evaluation.objective
+            assert [r.variables for r in a.per_net] \
+                == [r.variables for r in b.per_net]
+        if not cp.resolved_splits():
+            assert a.split_index == -1
+            assert a.evaluation.objective == np.inf
+            assert not a.evaluation.feasible and a.evaluation.violations
+
+
+@given(data=st.data())
+@settings(max_examples=3, deadline=None)
+def test_random_comap_evaluate_engines_agree(data):
+    _check_comap_evaluate(data)
+
+
+@given(data=st.data())
+@settings(max_examples=2, deadline=None)
+def test_random_comap_optimisers_identical(data):
+    _check_comap_optimisers(data)
+
+
+@pytest.mark.slow
+@given(data=st.data())
+@settings(max_examples=8, deadline=None)
+def test_random_comap_evaluate_agree_deep(data):
+    _check_comap_evaluate(data)
+
+
+@pytest.mark.slow
+@given(data=st.data())
+@settings(max_examples=5, deadline=None)
+def test_random_comap_optimisers_identical_deep(data):
+    _check_comap_optimisers(data)

@@ -80,6 +80,13 @@ def bench_row(record: Dict[str, Any]) -> Dict[str, Any]:
             "gauges": {k[len("service."):]: v for k, v in g.items()
                        if k.startswith("service.")},
         },
+        # multi-network co-mapping (comap lane): joint vs independent
+        # composite objectives and the improvement the joint split buys
+        "comap": {
+            "counters": section("comap."),
+            "gauges": {k[len("comap."):]: v for k, v in g.items()
+                       if k.startswith("comap.")},
+        },
         "config": record["config"],
     }
 
